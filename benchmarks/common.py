@@ -1,0 +1,40 @@
+"""Shared benchmark helpers: CSV emission + result persistence."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+_rows: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.3f},{derived}"
+    _rows.append(row)
+    print(row, flush=True)
+
+
+def rows() -> List[str]:
+    return list(_rows)
+
+
+def save_json(name: str, payload: Dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True, default=float)
+    return path
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Mean wall seconds per call (blocking fn)."""
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args)
+    return (time.perf_counter() - t0) / iters

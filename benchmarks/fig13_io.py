@@ -1,0 +1,43 @@
+"""Paper Fig. 13: fast storage (SSD) vs slow (HDD) — vet moves toward 1.
+
+Analogue: per-record input stalls injected (slow device) vs none (fast).
+The slow-device job's vet is materially higher; the fast job approaches the
+paper's SSD observation (vet clustered near ~1.3).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import vet_job
+from repro.profiling import run_contended_job
+
+from .common import emit, save_json
+
+
+def run(records: int = 300):
+    from repro.profiling.contention import make_record_work
+
+    base_work = make_record_work()
+
+    state = {"i": 0}
+
+    def slow_work():
+        state["i"] += 1
+        if state["i"] % 8 == 0:
+            time.sleep(0.004)  # disk-access-scale stall inside the record
+        return base_work()
+
+    fast = run_contended_job(2, records, unit=5)
+    slow = run_contended_job(2, records, unit=5, work=slow_work)
+    vf, vs = vet_job(fast, buckets=64), vet_job(slow, buckets=64)
+    emit("fig13/fast_vs_slow", 0.0,
+         f"vet_fast={float(vf.vet_job):.2f};vet_slow={float(vs.vet_job):.2f};"
+         f"ei_fast={float(vf.ei_mean):.4f}s;ei_slow={float(vs.ei_mean):.4f}s")
+    save_json("fig13_io", {
+        "vet_fast": float(vf.vet_job), "vet_slow": float(vs.vet_job),
+        "ei_fast": float(vf.ei_mean), "ei_slow": float(vs.ei_mean),
+    })
+    return vf, vs

@@ -1,0 +1,28 @@
+"""Paper Fig. 3: "spill" sub-phase times are small and constant across tasks.
+
+Analogue: the host-side data-fetch phase per training step vs the step
+("read-map") phase.  The fetch time must be (a) much smaller than the step
+and (b) near-constant across steps — justifying the paper's decision to
+estimate ideal time from the dominant phase only.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.train import train
+
+from .common import emit, save_json
+
+
+def run():
+    cfg = get_config("qwen3-14b").reduced()
+    res = train(cfg, steps=24, batch=4, seq_len=32, verbose=False, q_chunk=32)
+    totals = res.phase_totals
+    ratio = totals.get("data", 0.0) / max(totals.get("step", 1e-9), 1e-9)
+    emit("fig3/phase_ratio", totals.get("step", 0.0) / 24 * 1e6,
+         f"data_total={totals.get('data', 0):.3f}s;"
+         f"step_total={totals.get('step', 0):.3f}s;data/step={ratio:.1%}")
+    save_json("fig3_spill", {"phase_totals": totals, "data_step_ratio": ratio})
+    return totals

@@ -1,0 +1,35 @@
+"""Paper Fig. 6 + KS test: vet_task samples from same-config jobs come from
+the same population (the paper's KS p-value for jobs 1,2 was 0.61)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ks_2samp, vet_task
+from repro.profiling import run_contended_job
+
+from .common import emit, save_json
+
+
+def run():
+    # two identically-configured "jobs" on this host
+    job_a = run_contended_job(2, 350, unit=5)
+    job_b = run_contended_job(2, 350, unit=5)
+    # per-unit vet over sliding sub-windows => a vet_task sample per job
+    def vets(job):
+        out = []
+        for task in job:
+            n = task.size
+            for lo in range(0, n - 32, 16):
+                out.append(float(vet_task(task[lo:lo + 32], buckets=None,
+                                          cut_space="log").vet))
+        return np.asarray(out)
+
+    va, vb = vets(job_a), vets(job_b)
+    ks = ks_2samp(va, vb)
+    emit("fig6/ks_same_config", 0.0,
+         f"mean_a={va.mean():.2f};mean_b={vb.mean():.2f};"
+         f"ks_p={ks.pvalue:.3f};same_pop={ks.pvalue > 0.05}")
+    save_json("fig6_ks", {"p": ks.pvalue, "d": ks.statistic,
+                          "mean_a": float(va.mean()), "mean_b": float(vb.mean())})
+    return ks

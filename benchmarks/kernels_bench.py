@@ -1,0 +1,55 @@
+"""Kernel micro-benchmarks: µs/call for the Pallas kernels (interpret mode on
+this CPU container — correctness/latency tracking, not TPU numbers) and their
+pure-jnp references."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.changepoint.ops import changepoint_pallas
+from repro.kernels.changepoint.ref import changepoint_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ref import ssd_ref
+
+from .common import emit, save_json, time_fn
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run():
+    out = {}
+    # changepoint on 64k records
+    import numpy as np
+
+    y = jnp.asarray(np.sort(np.random.default_rng(0).pareto(1.3, 65536) + 1))
+    t_k = time_fn(lambda: jax.block_until_ready(changepoint_pallas(y)), iters=5)
+    t_r = time_fn(lambda: jax.block_until_ready(changepoint_ref(y)), iters=5)
+    emit("kernels/changepoint_64k", t_k * 1e6, f"ref_us={t_r*1e6:.1f}")
+    out["changepoint"] = {"kernel_us": t_k * 1e6, "ref_us": t_r * 1e6}
+
+    # flash attention 512 x 8h x 64d
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 512, 8, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 512, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 512, 2, 64), jnp.float32)
+    t_k = time_fn(lambda: jax.block_until_ready(flash_attention(q, k, v)), iters=3)
+    t_r = time_fn(lambda: jax.block_until_ready(attention_ref(q, k, v)), iters=3)
+    emit("kernels/flash_512", t_k * 1e6, f"ref_us={t_r*1e6:.1f}")
+    out["flash"] = {"kernel_us": t_k * 1e6, "ref_us": t_r * 1e6}
+
+    # ssd 512 x 4h x 64p x 64n
+    x = jax.random.normal(ks[0], (1, 512, 4, 64), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 512, 4), jnp.float32))
+    a_log = jnp.log(jnp.linspace(1.0, 8.0, 4))
+    bb = jax.random.normal(ks[2], (1, 512, 64), jnp.float32)
+    d = jnp.ones((4,))
+    t_k = time_fn(lambda: jax.block_until_ready(ssd(x, dt, a_log, bb, bb, d)), iters=3)
+    t_r = time_fn(lambda: jax.block_until_ready(ssd_ref(x, dt, a_log, bb, bb, d)), iters=3)
+    emit("kernels/ssd_512", t_k * 1e6, f"ref_us={t_r*1e6:.1f}")
+    out["ssd"] = {"kernel_us": t_k * 1e6, "ref_us": t_r * 1e6}
+
+    save_json("kernels_bench", out)
+    return out

@@ -1,0 +1,74 @@
+"""Roofline table from the dry-run JSON (§Roofline of EXPERIMENTS.md).
+
+Per (arch x shape) single-pod cell: the three terms (compute / memory /
+collective) in seconds, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and
+the implied roofline fraction.  Multi-pod rows report the coherence/memory
+gate only.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit, save_json
+
+DRYRUN_JSON = os.path.join(os.path.dirname(__file__), "results", "dryrun.json")
+
+
+def load():
+    with open(DRYRUN_JSON) as f:
+        return json.load(f)
+
+
+def run():
+    try:
+        results = load()
+    except FileNotFoundError:
+        emit("roofline/missing", 0.0, "run launch/dryrun.py --sweep first")
+        return None
+
+    rows = []
+    for key in sorted(results):
+        r = results[key]
+        if r.get("mesh") != "single":
+            continue
+        if r.get("status") == "skipped":
+            rows.append({"cell": key, "status": "skipped", "reason": r["reason"]})
+            continue
+        if r.get("status") != "ok" or "t_compute_s" not in r:
+            rows.append({"cell": key, "status": r.get("status", "?")})
+            continue
+        # Roofline fraction: for compute-shaped cells, the share of the bound
+        # spent on useful model flops; for decode (memory-shaped), how close
+        # HLO traffic is to the mandatory params+cache streaming floor.
+        if r.get("shape") in ("decode_32k", "long_500k"):
+            floor = r.get("mandatory_bytes_per_chip")
+            frac = (floor / (r["t_memory_s"] * 819e9)) if floor else (
+                r["useful_flop_ratio"] * r["t_compute_s"] / r["roofline_bound_s"])
+        else:
+            frac = r["useful_flop_ratio"] * r["t_compute_s"] / r["roofline_bound_s"]
+        row = {
+            "cell": key,
+            "t_compute_s": r["t_compute_s"],
+            "t_memory_s": r["t_memory_s"],
+            "t_collective_s": r["t_collective_s"],
+            "dominant": r["dominant"],
+            "useful_flop_ratio": r["useful_flop_ratio"],
+            "roofline_fraction": frac,
+            "n_micro": r.get("n_micro"),
+            "fits_hbm": r.get("fits_hbm"),
+        }
+        rows.append(row)
+        emit(f"roofline/{key}", r["roofline_bound_s"] * 1e6,
+             f"dom={r['dominant']};frac={frac:.3f};"
+             f"useful={r['useful_flop_ratio']:.2f};fits={r.get('fits_hbm')}")
+    ok = [x for x in rows if "roofline_fraction" in x]
+    if ok:
+        worst = min(ok, key=lambda x: x["roofline_fraction"])
+        coll = [x for x in ok if x["dominant"] == "collective"]
+        emit("roofline/summary", 0.0,
+             f"cells={len(ok)};worst={worst['cell']}"
+             f"({worst['roofline_fraction']:.3f});collective_bound={len(coll)}")
+    save_json("roofline_table", {"rows": rows})
+    return rows

@@ -1,0 +1,56 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows; detailed payloads land in
+benchmarks/results/*.json.  ``python -m benchmarks.run [--only NAME]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("table2_slots", "Paper Table 2: PR/EI/vet vs worker count"),
+    ("table3_tuned", "Paper Table 3: vet audit of auto-tuned configs"),
+    ("fig1_gap", "Paper Fig 1: tuned time vs estimated ideal"),
+    ("fig3_spill", "Paper Fig 3: aux-phase constancy"),
+    ("fig6_ks", "Paper Fig 6: vet stability across same-config jobs (KS)"),
+    ("fig8_distribution", "Paper Fig 8: record-time distribution"),
+    ("fig9_tail", "Paper Fig 9: Hill plot / emplot heavy tail"),
+    ("fig13_io", "Paper Fig 13: fast vs slow input device"),
+    ("fig14_correlation", "Paper Fig 14: vet vs task-time correlation"),
+    ("roofline", "Framework: roofline table from dry-run"),
+    ("kernels_bench", "Framework: Pallas kernel micro-benchmarks"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="run a single suite")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod_name, desc in SUITES:
+        if args.only and args.only != mod_name:
+            continue
+        print(f"# === {mod_name}: {desc}", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            mod.run()
+            print(f"# --- {mod_name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures.append(mod_name)
+            print(f"# !!! {mod_name} FAILED", flush=True)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED suites: {failures}", flush=True)
+        sys.exit(1)
+    print("# all suites passed", flush=True)
+
+
+if __name__ == "__main__":
+    main()

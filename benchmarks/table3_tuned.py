@@ -1,0 +1,66 @@
+"""Paper Table 3: even auto-tuned ("Starfish-optimized") configurations keep a
+consistent EI and vet >> 1 — the tuner minimizes step time within its knob
+space, vet shows how much reducible overhead remains.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.sched.autotune import tune
+
+from .common import emit, save_json
+
+
+def run():
+    cfg = get_config("qwen3-14b").reduced()
+    candidates = tune(cfg, batch=8, seq_len=64, steps_per_candidate=24,
+                      n_micro_options=(1, 2), q_chunk_options=(32, 64),
+                      verbose=False)
+    eis = np.asarray([c.ei for c in candidates])
+    out = []
+    for i, c in enumerate(candidates):
+        emit(f"table3/cand{i}", c.mean_step_s * 1e6,
+             f"knobs={c.knobs};vet={c.vet:.2f};EI={c.ei:.4f}s")
+        out.append({"knobs": c.knobs, "step_s": c.mean_step_s,
+                    "vet": c.vet, "ei": c.ei})
+    drift = float((eis.max() - eis.min()) / eis.min()) if eis.size else 0.0
+
+    # The paper's cluster was *shared*: its Starfish-tuned jobs still showed
+    # vet 3.3-4.2 because tuning can't remove contention overhead.  Re-audit
+    # the best tuned config under host contention: vet must rise while EI
+    # stays at the tuned-job level.
+    import threading
+
+    from repro.profiling.contention import make_record_work
+
+    stop = threading.Event()
+    spin_work = make_record_work()
+
+    def spin():
+        while not stop.is_set():
+            spin_work()
+
+    th = threading.Thread(target=spin, daemon=True)
+    th.start()
+    try:
+        contended = tune(cfg, batch=8, seq_len=64, steps_per_candidate=24,
+                         n_micro_options=(candidates[0].knobs["n_micro"],),
+                         q_chunk_options=(candidates[0].knobs["q_chunk"],),
+                         verbose=False)[0]
+    finally:
+        stop.set()
+        th.join()
+    emit("table3/best_contended", contended.mean_step_s * 1e6,
+         f"vet={contended.vet:.2f};EI={contended.ei:.4f}s;"
+         f"ei_vs_idle={contended.ei / candidates[0].ei:.2f}x")
+    emit("table3/summary", 0.0,
+         f"ei_consistency_drift={drift:.1%};best={candidates[0].knobs};"
+         f"vet_idle={candidates[0].vet:.2f};vet_contended={contended.vet:.2f}")
+    save_json("table3_tuned", {
+        "candidates": out, "ei_drift": drift,
+        "contended": {"vet": contended.vet, "ei": contended.ei,
+                      "step_s": contended.mean_step_s},
+    })
+    return candidates

@@ -1,0 +1,48 @@
+"""Quickstart: the vet optimality measure end-to-end in ~a minute.
+
+1. Simulated profile with known ground truth -> EI recovers the ideal.
+2. REAL oversubscription on this host (paper Table 2 regime) -> PR grows
+   with worker count, EI stays put, vet exposes the reducible overhead.
+3. Heavy-tail diagnosis (Hill estimator, paper Fig. 9).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import tail_report, vet_job, vet_task
+from repro.profiling import run_contended_job, simulate_records
+
+
+def main():
+    print("=" * 64)
+    print("1) Controlled validation: simulator with known ground truth")
+    p = simulate_records(200_000, base=1e-6, base_jitter=0.1, io_frac=0.1,
+                         io_cost=2e-6, overhead_frac=0.05, overhead_scale=2e-5,
+                         seed=0)
+    r = vet_task(p.times)
+    print(f"   true EI {p.true_ei:.3f}s   estimated EI {float(r.ei):.3f}s "
+          f"({abs(float(r.ei) - p.true_ei) / p.true_ei:+.1%})")
+    print(f"   true vet {p.true_vet:.2f}    estimated vet {float(r.vet):.2f}")
+
+    print("=" * 64)
+    print("2) Real measurement: oversubscribed workers on this host")
+    print("   (the paper's Table 2: slots 1->4 gave PR 3.2->10.3s, EI ~const)")
+    for w in (1, 2, 4):
+        tasks = run_contended_job(w, 300, unit=5)
+        jr = vet_job(tasks, buckets=64)
+        print(f"   W={w}:  PR {float(jr.pr_mean)*1e3:7.1f}ms   "
+              f"EI {float(jr.ei_mean)*1e3:6.1f}ms   vet_job {float(jr.vet_job):.2f}")
+
+    print("=" * 64)
+    print("3) Tail diagnosis (paper Fig. 9: alpha ~ 1.3 => heavy tail)")
+    tasks = run_contended_job(3, 600, unit=1)
+    times = np.concatenate(tasks)
+    rep = tail_report(times)
+    print(f"   Hill alpha {rep.alpha:.2f}  (band {rep.alpha_stable_band[0]:.2f}"
+          f"-{rep.alpha_stable_band[1]:.2f})  heavy={rep.heavy}")
+    print("Done. vet == 1 would mean nothing left to optimize.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""End-to-end driver: train the ~130M-parameter mamba2-130m config with the
+full production substrate — deterministic data pipeline, AdamW, async atomic
+checkpointing, crash-resume, and the vet dashboard on live step records.
+
+Default run is CPU-sized (--steps 300 at batch 4 x seq 256 is a real
+multi-hour CPU job; use --steps 30 for a quick pass — the loop, checkpoint
+cadence, and vet instrumentation are identical).
+
+Run:  PYTHONPATH=src python examples/train_100m.py --steps 30
+"""
+
+import argparse
+
+from repro.configs import get_config
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt_100m")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = get_config("mamba2-130m")  # 0.13B params, published config
+    print(f"[example] {cfg.name}: {cfg.param_count()/1e6:.0f}M params, "
+          f"{cfg.num_layers}L x d{cfg.d_model}, SSD state {cfg.ssm_state}")
+    res = train(
+        cfg, steps=args.steps, batch=args.batch, seq_len=args.seq_len,
+        lr=args.lr, ckpt_dir=args.ckpt_dir, ckpt_every=max(args.steps // 5, 10),
+        record_unit=5, log_every=max(args.steps // 20, 1),
+    )
+    print(f"[example] loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f} over "
+          f"{len(res.losses)} steps")
+    if res.vet is not None:
+        print(f"[example] vet {res.vet:.2f}  (EI {res.ei:.2f}s of PR {res.pr:.2f}s)"
+              f" -> {res.vet - 1:.0%} reducible overhead in this run")
+    print(f"[example] phases: {res.phase_totals}")
+    print(f"[example] checkpoints in {args.ckpt_dir} — rerun to resume.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Render EXPERIMENTS.md §Roofline + §Dry-run tables from dryrun.json."""
+
+import json
+import sys
+
+GiB = 2 ** 30
+
+
+def main(path="benchmarks/results/dryrun.json"):
+    d = json.load(open(path))
+
+    print("### Single-pod roofline table (16x16 = 256 chips, TPU v5e terms)\n")
+    print("| cell | n_micro | T_compute (s) | T_memory (s) | T_collective (s) |"
+          " dominant | MODEL/HLO flops | peak GiB (tpu-est) | fits 16GiB |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for k in sorted(d):
+        v = d[k]
+        if v.get("mesh") != "single":
+            continue
+        cell = f"{v['arch']} × {v['shape']}"
+        if v.get("status") == "skipped":
+            print(f"| {cell} | — | — | — | — | *skipped* | — | — | {v['reason'][:48]} |")
+            continue
+        if v.get("status") != "ok" or "t_compute_s" not in v:
+            print(f"| {cell} | — | — | — | — | *{v.get('status')}* | — | — | — |")
+            continue
+        peak = (v.get("peak_tpu_estimate_bytes") or
+                v["memory"]["peak_device_bytes"]) / GiB
+        md = v.get("moment_dtype", "f32")
+        nm = f"{v.get('n_micro', 1)}" + ("/bf16-mom" if md == "bfloat16" else "")
+        print(f"| {cell} | {nm} | {v['t_compute_s']:.3f} | {v['t_memory_s']:.3f} "
+              f"| {v['t_collective_s']:.3f} | **{v['dominant']}** "
+              f"| {v['useful_flop_ratio']:.3f} | {peak:.1f} | "
+              f"{'yes' if v.get('fits_hbm') else 'NO'} |")
+
+    print("\n### Multi-pod (2 x 16 x 16 = 512 chips) coherence gate\n")
+    print("| cell | status | peak GiB (tpu-est) | fits |")
+    print("|---|---|---|---|")
+    for k in sorted(d):
+        v = d[k]
+        if v.get("mesh") != "multi":
+            continue
+        cell = f"{v['arch']} × {v['shape']}"
+        if v.get("status") == "skipped":
+            print(f"| {cell} | skipped ({v['reason'][:40]}) | — | — |")
+            continue
+        if v.get("status") != "ok":
+            print(f"| {cell} | {v.get('status')} | — | — |")
+            continue
+        peak = (v.get("peak_tpu_estimate_bytes") or
+                v["memory"]["peak_device_bytes"]) / GiB
+        print(f"| {cell} | ok | {peak:.1f} | {'yes' if v.get('fits_hbm') else 'NO'} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

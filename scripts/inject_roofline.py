@@ -1,0 +1,21 @@
+"""Inject generated §Dry-run/§Roofline tables into EXPERIMENTS.md."""
+
+import io
+import sys
+from contextlib import redirect_stdout
+
+sys.path.insert(0, "scripts")
+from gen_roofline_md import main as gen
+
+buf = io.StringIO()
+with redirect_stdout(buf):
+    gen()
+tables = buf.getvalue()
+
+path = "EXPERIMENTS.md"
+text = open(path).read()
+marker = "<!-- ROOFLINE_TABLES -->"
+assert marker in text
+text = text.replace(marker, marker + "\n\n" + tables)
+open(path, "w").write(text)
+print(f"injected {len(tables.splitlines())} table lines")

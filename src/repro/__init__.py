@@ -1,0 +1,4 @@
+"""repro: the vet optimality measure (Kim/Baek/Lee 2013) as a first-class
+feature of a multi-pod JAX training/serving framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+from .checkpoint import AsyncCheckpointer, cleanup_keep_n, latest_step, restore, save
+
+__all__ = ["AsyncCheckpointer", "cleanup_keep_n", "latest_step", "restore", "save"]

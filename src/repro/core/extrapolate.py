@@ -1,0 +1,63 @@
+"""Monotone extrapolation of the ideal record-time curve g-hat (paper §4.3).
+
+The paper's three-point-moving-average filter
+
+    g(r+1) = 2 g(r) - g(r-1),   g(t-1) = Y_{t-1},  g(t) = Y_t
+
+telescopes to the closed form
+
+    g(t + j) = Y_t + j * (Y_t - Y_{t-1}),   j >= 0
+
+i.e. a linear continuation with the local slope at the change-point.  Since the
+observations are ordered, the slope is non-negative, so g is monotonically
+non-decreasing and continuous at t — the paper's two stated restrictions.
+
+All functions are jit-safe for *dynamic* t (static shapes, masked selects).
+Indices follow the paper: t is the 1-indexed size of the "normal" prefix.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ghat_curve", "local_slope"]
+
+
+def _promote(y: jax.Array) -> jax.Array:
+    y = jnp.asarray(y)
+    return y.astype(jnp.promote_types(y.dtype, jnp.float32))
+
+
+def local_slope(y_sorted: jax.Array, t, robust: bool = False) -> jax.Array:
+    """Slope used for the continuation: Y_t - Y_{t-1} (paper), or a robust
+    variant (median of the last 5 pre-change-point diffs) for noisy profiles."""
+    y = _promote(y_sorted)
+    n = y.shape[0]
+    t = jnp.asarray(t, jnp.int32)
+    i = jnp.clip(t - 1, 0, n - 1)  # 0-indexed position of Y_t
+    if not robust:
+        prev = jnp.clip(i - 1, 0, n - 1)
+        return jnp.maximum(y[i] - y[prev], 0.0)
+    # Median of the last few diffs before t (window 5, masked).
+    d = jnp.diff(y, prepend=y[:1])
+    offs = jnp.arange(5)
+    pos = jnp.clip(i - offs, 0, n - 1)
+    window = d[pos]
+    return jnp.maximum(jnp.median(window), 0.0)
+
+
+def ghat_curve(y_sorted: jax.Array, t, robust_slope: bool = False) -> jax.Array:
+    """Full estimated-ideal curve g(x), x = 1..n (paper's g):
+
+        g(x) = Y_x                                  for x <= t
+        g(x) = Y_t + (x - t) * slope                for x >  t
+    """
+    y = _promote(y_sorted)
+    n = y.shape[0]
+    t = jnp.asarray(t, jnp.int32)
+    slope = local_slope(y, t, robust=robust_slope)
+    ranks = jnp.arange(1, n + 1)
+    y_t = y[jnp.clip(t - 1, 0, n - 1)]
+    extrap = y_t + slope * (ranks - t).astype(y.dtype)
+    return jnp.where(ranks <= t, y, extrap)

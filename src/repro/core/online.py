@@ -1,0 +1,83 @@
+"""Streaming vet (beyond-paper): windowed online estimation for live jobs.
+
+The paper computes vet post-hoc over a task's full profile.  A production
+dashboard needs it *during* the run: this maintains a bounded reservoir of
+recent records and re-estimates (EI, OC, vet) incrementally, with exponential
+forgetting across windows so regime changes (a straggler appearing, input
+storage degrading) surface within one window.
+
+Properties kept from the batch estimator: scale-equivariance, EI+OC == PR
+per window, vet >= 1 on well-formed profiles.
+"""
+
+from __future__ import annotations
+
+from typing import Deque, NamedTuple, Optional
+
+import collections
+
+import numpy as np
+
+from .vet import vet_task
+
+__all__ = ["OnlineVet", "OnlineVetSnapshot"]
+
+
+class OnlineVetSnapshot(NamedTuple):
+    vet: float
+    ei_rate: float  # EI per record (seconds) — the live ideal-cost estimate
+    pr_rate: float  # PR per record
+    n_window: int
+    smoothed_vet: float
+
+
+class OnlineVet:
+    """Bounded-memory online vet.
+
+    feed(times) appends record times; every ``window`` records a fresh batch
+    estimate runs on the newest window and folds into an EMA.  O(window) memory
+    regardless of stream length.
+    """
+
+    def __init__(self, window: int = 512, alpha: float = 0.3,
+                 buckets: Optional[int] = 64):
+        if window < 64:
+            raise ValueError("window must be >= 64")
+        self.window = window
+        self.alpha = alpha
+        self.buckets = buckets
+        self._buf: Deque[float] = collections.deque(maxlen=window)
+        self._since_update = 0
+        self._smoothed: Optional[float] = None
+        self._last: Optional[OnlineVetSnapshot] = None
+
+    def feed(self, times) -> Optional[OnlineVetSnapshot]:
+        """Add record times; returns a new snapshot when a window completes."""
+        arr = np.atleast_1d(np.asarray(times, dtype=np.float64))
+        out = None
+        for t in arr:
+            self._buf.append(float(t))
+            self._since_update += 1
+            if len(self._buf) >= self.window and self._since_update >= self.window // 2:
+                out = self._estimate()
+                self._since_update = 0
+        return out
+
+    def _estimate(self) -> OnlineVetSnapshot:
+        window = np.asarray(self._buf)
+        r = vet_task(window, buckets=self.buckets)
+        vet = float(r.vet)
+        self._smoothed = (vet if self._smoothed is None
+                          else self.alpha * vet + (1 - self.alpha) * self._smoothed)
+        self._last = OnlineVetSnapshot(
+            vet=vet,
+            ei_rate=float(r.ei) / window.size,
+            pr_rate=float(r.pr) / window.size,
+            n_window=window.size,
+            smoothed_vet=self._smoothed,
+        )
+        return self._last
+
+    @property
+    def snapshot(self) -> Optional[OnlineVetSnapshot]:
+        return self._last

@@ -1,0 +1,69 @@
+"""Statistical utilities used by the paper's evaluation (§4.4, §5).
+
+- Two-sample Kolmogorov-Smirnov test (paper Fig. 6: are vet_task samples of two
+  same-config jobs from the same population?)  D statistic + asymptotic p-value
+  via the Kolmogorov distribution series (Massey 1951 [12]).
+- Pearson correlation (paper Fig. 14: vet_task vs task processing time).
+- 1000-bucket aggregation used by the paper's distribution figures (Fig. 8).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ks_2samp", "KSResult", "pearson", "bucketize"]
+
+
+class KSResult(NamedTuple):
+    statistic: float
+    pvalue: float
+
+
+def _kolmogorov_sf(x: float, terms: int = 101) -> float:
+    """Survival function of the Kolmogorov distribution,
+    Q(x) = 2 sum_{j>=1} (-1)^{j-1} exp(-2 j^2 x^2)."""
+    if x <= 0:
+        return 1.0
+    j = np.arange(1, terms, dtype=np.float64)
+    s = 2.0 * np.sum((-1.0) ** (j - 1) * np.exp(-2.0 * (j * x) ** 2))
+    return float(min(max(s, 0.0), 1.0))
+
+
+def ks_2samp(a, b) -> KSResult:
+    """Two-sample KS test (asymptotic p-value, two-sided)."""
+    a = np.sort(np.asarray(a, dtype=np.float64))
+    b = np.sort(np.asarray(b, dtype=np.float64))
+    na, nb = a.size, b.size
+    if na == 0 or nb == 0:
+        raise ValueError("empty sample")
+    both = np.concatenate([a, b])
+    cdf_a = np.searchsorted(a, both, side="right") / na
+    cdf_b = np.searchsorted(b, both, side="right") / nb
+    d = float(np.max(np.abs(cdf_a - cdf_b)))
+    en = np.sqrt(na * nb / (na + nb))
+    p = _kolmogorov_sf((en + 0.12 + 0.11 / en) * d)
+    return KSResult(statistic=d, pvalue=p)
+
+
+def pearson(x, y) -> float:
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    xc = x - jnp.mean(x)
+    yc = y - jnp.mean(y)
+    denom = jnp.sqrt(jnp.sum(xc * xc) * jnp.sum(yc * yc))
+    return float(jnp.sum(xc * yc) / jnp.where(denom > 0, denom, 1.0))
+
+
+def bucketize(times, n_buckets: int = 1000):
+    """Paper Fig. 8 view: sort records by processing time, split into
+    ``n_buckets`` rank buckets, return the per-bucket *sum* of times."""
+    y = jnp.sort(jnp.asarray(times))
+    n = y.shape[0]
+    if n % n_buckets != 0:
+        pad = n_buckets - n % n_buckets
+        y = jnp.concatenate([y, jnp.zeros((pad,), y.dtype)])
+    return jnp.sum(y.reshape(n_buckets, -1), axis=1)

@@ -1,0 +1,3 @@
+from .sharding import MeshAxes, batch_specs, cache_specs, opt_state_specs, param_specs
+
+__all__ = ["MeshAxes", "batch_specs", "cache_specs", "opt_state_specs", "param_specs"]

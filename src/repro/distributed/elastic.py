@@ -1,0 +1,60 @@
+"""Elastic rescale: re-derive shardings for a changed device set and reshard
+a checkpointed state.
+
+Checkpoints are logical (full arrays + logical axis rules), so scaling from
+mesh (d1, m1) to (d2, m2) is: load -> rebuild specs for the new mesh ->
+device_put with the new NamedShardings.  Failure handling in launch/train.py
+uses this to resume on fewer (or more) healthy chips without conversion
+tooling.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+
+from .sharding import MeshAxes, opt_state_specs, param_specs
+
+__all__ = ["reshard_state", "choose_mesh_shape"]
+
+
+def choose_mesh_shape(n_devices: int, *, model_axis: Optional[int] = None):
+    """Largest (data, model) grid for the healthy device count.
+
+    Keeps the model axis if it still divides; otherwise picks the biggest
+    power-of-two model axis that fits (TP must divide attention/ffn dims).
+    """
+    if model_axis and n_devices % model_axis == 0:
+        return (n_devices // model_axis, model_axis)
+    m = 1
+    while m * 2 <= n_devices and (n_devices % (m * 2) == 0) and m * 2 <= 16:
+        m *= 2
+    return (n_devices // m, m)
+
+
+def reshard_state(cfg, mesh, params, opt_state=None):
+    """device_put params (and optimizer state) onto a (new) mesh using the
+    logical sharding rules.  Works from host (numpy) or device arrays."""
+    ax = MeshAxes(mesh)
+    pspec = param_specs(params, ax, cfg)
+    params = jax.device_put(
+        params, jax.tree.map(lambda s: NamedSharding(mesh, s), pspec)
+    )
+    if opt_state is None:
+        return params
+    from ..optim.adamw import OptState
+    from jax.sharding import PartitionSpec as P
+
+    ospec = opt_state_specs(opt_state.mu, ax, cfg)
+    opt = OptState(
+        step=jax.device_put(opt_state.step, NamedSharding(mesh, P())),
+        mu=jax.device_put(
+            opt_state.mu, jax.tree.map(lambda s: NamedSharding(mesh, s), ospec)
+        ),
+        nu=jax.device_put(
+            opt_state.nu, jax.tree.map(lambda s: NamedSharding(mesh, s), ospec)
+        ),
+    )
+    return params, opt

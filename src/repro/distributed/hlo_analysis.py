@@ -1,0 +1,84 @@
+"""Collective-traffic analysis from compiled HLO text.
+
+``cost_analysis()`` has no collective-bytes entry, so we parse the (post-SPMD)
+HLO: every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute contributes its *output* operand bytes.  Ring cost model
+per chip:
+
+    all-gather        bytes * (n-1)/n   ~ bytes
+    reduce-scatter    bytes * (n-1)/n   ~ bytes   (input bytes ~ output*n; we
+                                                   count the transferred share)
+    all-reduce        2 * bytes * (n-1)/n ~ 2*bytes   (RS + AG)
+    all-to-all        bytes * (n-1)/n   ~ bytes
+    collective-permute  bytes
+
+We fold the factor into ``ici_bytes`` (the per-chip traffic estimate) and also
+report the raw per-kind byte sums.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+__all__ = ["collective_bytes", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_OP_RE = re.compile(
+    r"=\s*(?P<out>.*?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<start>-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+_FACTOR = {
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-reduce": 2.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum collective output bytes per op kind + ring-model per-chip traffic.
+
+    Works on post-SPMD HLO (the per-device program): shapes in the text are
+    already per-shard, so sums are per-chip.
+    """
+    by_kind: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    ici = 0.0
+    for m in _OP_RE.finditer(hlo_text):
+        out = m.group("out")
+        op = m.group("op")
+        b = _shape_bytes(out)
+        by_kind[op] += b
+        counts[op] += 1
+        ici += b * _FACTOR[op]
+    return {
+        "ici_bytes": ici,
+        "bytes_by_kind": dict(by_kind),
+        "counts": dict(counts),
+        "total_output_bytes": float(sum(by_kind.values())),
+    }

@@ -1,0 +1,238 @@
+"""Sharding rules: logical parameter/activation/cache layouts -> mesh axes.
+
+Scheme (DESIGN.md §4):
+  * batch/tokens sharded over the DP axes ("pod", "data");
+  * TP over "model": attention by heads (replicating KV projections when
+    kv_heads doesn't divide the axis), MLP by d_ff, vocab by "model";
+  * FSDP: the non-TP matrix dim of each weight sharded over "data";
+  * ZeRO: optimizer moments additionally sharded over "data" on the largest
+    still-replicated dim;
+  * decode KV caches sharded over "model" on the *sequence* axis
+    (flash-decoding style) and over DP on batch when divisible.
+
+All rules operate on pytree paths + leaf shapes, so they apply uniformly to
+stacked (leading layer-dim) parameters.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "MeshAxes",
+    "param_specs",
+    "opt_state_specs",
+    "batch_specs",
+    "cache_specs",
+    "named",
+]
+
+
+class MeshAxes:
+    """Axis-name bundle; dp includes 'pod' when present in the mesh."""
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+        names = mesh.axis_names
+        self.tp = "model" if "model" in names else None
+        dp = tuple(a for a in ("pod", "data") if a in names)
+        self.dp: Tuple[str, ...] = dp
+        self.dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+        self.tp_size = mesh.shape[self.tp] if self.tp else 1
+
+    def dp_spec(self):
+        return self.dp if len(self.dp) > 1 else (self.dp[0] if self.dp else None)
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+# ------------------------------------------------------------- parameter rules
+def _leaf_spec(path: str, shape, ax: MeshAxes, cfg) -> P:
+    """PartitionSpec for one parameter leaf, identified by its tree path."""
+    tp, dp = ax.tp, ax.dp_spec()
+    r = len(shape)
+    stacked = path.startswith("seg") and r >= 2  # leading layer dim
+    L = (None,) if stacked else ()
+    s = shape[1:] if stacked else shape
+
+    def fsdp(dim_size):
+        if not getattr(cfg, "weights_fsdp", True):
+            return None
+        return dp if _div(dim_size, ax.dp_size) else None
+
+    def tpd(dim_size):
+        return tp if _div(dim_size, ax.tp_size) else None
+
+    if "embed" in path or path.endswith("head"):
+        # (V, D) or (D, V): vocab over tp, other dim over dp
+        big = int(np.argmax(s))
+        spec = [None, None]
+        spec[big] = tpd(s[big])
+        spec[1 - big] = fsdp(s[1 - big])
+        return P(*spec)
+
+    # Attention (flat projections: plain matrix rules)
+    if "attn" in path:
+        if path.endswith(("wq", "wk", "wv")):  # (D, H*Dh)
+            return P(*L, fsdp(s[0]), tpd(s[1]))
+        if path.endswith("wo"):  # (H*Dh, D)
+            return P(*L, tpd(s[0]), fsdp(s[1]))
+        if path.endswith(("bq", "bk", "bv")):  # (H*Dh,)
+            return P(*L, tpd(s[0]))
+        if path.endswith("wkv_a"):  # (D, lora+rope)
+            return P(*L, fsdp(s[0]), None)
+        if path.endswith("wkv_b"):  # (lora, H*(nope+v))
+            return P(*L, None, tpd(s[1]))
+    # MLP
+    if path.endswith(("gate", "up")):  # (D, F)
+        return P(*L, fsdp(s[0]), tpd(s[1]))
+    if path.endswith("down"):  # (F, D)
+        return P(*L, tpd(s[0]), fsdp(s[1]))
+    # MoE
+    if path.endswith("router"):
+        return P(*L, None, None)
+    if path.endswith(("wg", "wu", "wd")):  # (E, D, F) / (E, F, D)
+        return P(*L, tpd(s[0]), None, None)
+    # Mamba (fused baseline): in_proj boundaries don't align with shards ->
+    # FSDP only; see EXPERIMENTS.md §Perf for the split-projection variant.
+    if path.endswith("in_proj"):  # (D, 2di+2n+h)
+        return P(*L, fsdp(s[0]), None)
+    # Mamba (split projections): inner/head dims shard over TP
+    if path.endswith(("wz", "wx")):  # (D, di)
+        return P(*L, fsdp(s[0]), tpd(s[1]))
+    if path.endswith("wdt"):  # (D, H)
+        return P(*L, fsdp(s[0]), tpd(s[1]))
+    if path.endswith(("wb", "wc")):  # (D, N) tiny
+        return P(*L, fsdp(s[0]), None)
+    if path.endswith("conv_wx"):  # (K, di)
+        return P(*L, None, tpd(s[1]))
+    if path.endswith("conv_bx"):  # (di,)
+        return P(*L, tpd(s[0]))
+    if path.endswith("out_proj"):  # (di, D)
+        if getattr(cfg, "ssm_split_proj", False):
+            return P(*L, tpd(s[0]), fsdp(s[1]))
+        return P(*L, None, fsdp(s[1]))
+    if path.endswith(("conv_w", "conv_b", "conv_wbc", "conv_bbc",
+                      "A_log", "D", "dt_bias")):
+        return P(*L, *([None] * len(s)))
+    # norms and everything else: replicated (tiny)
+    return P(*L, *([None] * len(s)))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for pp in path:
+        if isinstance(pp, jax.tree_util.DictKey):
+            parts.append(str(pp.key))
+        elif isinstance(pp, jax.tree_util.SequenceKey):
+            parts.append(str(pp.idx))
+    return "/".join(parts)
+
+
+def param_specs(params_shape, ax: MeshAxes, cfg):
+    """Pytree of PartitionSpec matching a params pytree (of arrays or
+    ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(_path_str(path), leaf.shape, ax, cfg),
+        params_shape,
+    )
+
+
+def opt_state_specs(params_shape, ax: MeshAxes, cfg):
+    """ZeRO: moments take the param spec, then shard the largest
+    still-replicated dim over dp (if divisible)."""
+
+    def zero(path, leaf):
+        spec = _leaf_spec(_path_str(path), leaf.shape, ax, cfg)
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        # an axis may appear at most once per spec: skip leaves already
+        # dp-sharded by the FSDP rule
+        used = set()
+        for e in entries:
+            for a in (e if isinstance(e, tuple) else (e,)):
+                if a is not None:
+                    used.add(a)
+        if any(a in used for a in ax.dp):
+            return P(*entries)
+        # skip leading stacked-layer dim (index 0) when searching
+        best, best_dim = -1, -1
+        start = 1 if _path_str(path).startswith("seg") and len(leaf.shape) >= 2 else 0
+        for i in range(start, len(leaf.shape)):
+            if entries[i] is None and _div(leaf.shape[i], ax.dp_size):
+                if leaf.shape[i] > best:
+                    best, best_dim = leaf.shape[i], i
+        if best_dim >= 0 and ax.dp:
+            entries[best_dim] = ax.dp_spec()
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(zero, params_shape)
+
+
+# ------------------------------------------------------------ batch/activation
+def batch_specs(cfg, ax: MeshAxes, batch_shape):
+    """Input batch: leading (global batch) dim over dp when divisible."""
+
+    def spec(leaf):
+        b = leaf.shape[0]
+        first = ax.dp_spec() if _div(b, ax.dp_size) else None
+        return P(first, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map(spec, batch_shape)
+
+
+# ------------------------------------------------------------------ decode kv
+def cache_specs(cache_shape, ax: MeshAxes, cfg):
+    """Stacked caches: (count, B, S, ...) KV -> batch over dp, seq over tp
+    (sequence-sharded decode); mamba states -> batch over dp, heads over tp."""
+
+    def spec(path, leaf):
+        p = _path_str(path)
+        s = leaf.shape
+        dp = ax.dp_spec()
+        tp = ax.tp
+        if p.endswith(("k_scale", "v_scale")) and len(s) == 4:  # (L,B,S,KH)
+            return P(
+                None,
+                dp if _div(s[1], ax.dp_size) else None,
+                tp if _div(s[2], ax.tp_size) else None,
+                None,
+            )
+        if p.endswith(("k", "v")) and len(s) == 5:  # (L, B, S, KH, Dh)
+            return P(
+                None,
+                dp if _div(s[1], ax.dp_size) else None,
+                tp if _div(s[2], ax.tp_size) else None,
+                None,
+                None,
+            )
+        if p.endswith(("ckv", "krope")) and len(s) == 4:  # (L, B, S, dim)
+            return P(
+                None,
+                dp if _div(s[1], ax.dp_size) else None,
+                tp if _div(s[2], ax.tp_size) else None,
+                None,
+            )
+        if p.endswith("h") and len(s) == 5:  # (L, B, H, P, N) f32 ssm state
+            return P(
+                None,
+                dp if _div(s[1], ax.dp_size) else None,
+                tp if _div(s[2], ax.tp_size) else None,
+                None,
+                None,
+            )
+        if p.endswith("conv") and len(s) == 4:  # (L, B, K-1, C)
+            return P(None, dp if _div(s[1], ax.dp_size) else None, None, None)
+        return P(*([None] * len(s)))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU):
+changepoint (the paper's SSE scan), flash_attention, ssd."""

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel for the change-point SSE scan (the paper's hot loop).
+
+For n profiled records the two-segment LSE must evaluate SSE(k) at every
+candidate split k — the paper writes this as an O(n^2) regression loop; the
+prefix-sum formulation makes each SSE O(1).  The kernel evaluates a block of
+candidates per grid step from three prefix-sum arrays resident in VMEM:
+
+  grid  = (n // BLOCK,)
+  in    : cy, cyy, cxy blocks (BLOCK,) VMEM; totals (3,) replicated
+  out   : sse block (BLOCK,)
+
+Closed forms: Sx(k) = k(k+1)/2, Sxx(k) = k(k+1)(2k+1)/6 — no extra arrays.
+All math f32 on centered-y inputs (ops.py pre-centers y for stability).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["sse_scan", "DEFAULT_BLOCK"]
+
+DEFAULT_BLOCK = 1024
+
+
+def _seg_sse(n1, sx, sy, sxx, sxy, syy):
+    n1 = jnp.maximum(n1, 1.0)
+    sxx_c = sxx - sx * sx / n1
+    sxy_c = sxy - sx * sy / n1
+    syy_c = syy - sy * sy / n1
+    safe = sxx_c > 0.0
+    sse = syy_c - jnp.where(safe, sxy_c * sxy_c / jnp.where(safe, sxx_c, 1.0), 0.0)
+    return jnp.maximum(sse, 0.0)
+
+
+def _kernel(cy_ref, cyy_ref, cxy_ref, tot_ref, sse_ref, *, block: int, n: int,
+            omega: int):
+    pid = pl.program_id(0)
+    base = (pid * block).astype(jnp.float32)
+    k = base + jax.lax.broadcasted_iota(jnp.float32, (block,), 0) + 1.0
+
+    cy = cy_ref[...]
+    cyy = cyy_ref[...]
+    cxy = cxy_ref[...]
+    tot_y = tot_ref[0]
+    tot_yy = tot_ref[1]
+    tot_xy = tot_ref[2]
+
+    nf = jnp.float32(n)
+    sx1 = k * (k + 1.0) * 0.5
+    sxx1 = k * (k + 1.0) * (2.0 * k + 1.0) / 6.0
+    sx_tot = nf * (nf + 1.0) * 0.5
+    sxx_tot = nf * (nf + 1.0) * (2.0 * nf + 1.0) / 6.0
+
+    sse1 = _seg_sse(k, sx1, cy, sxx1, cxy, cyy)
+    n2 = nf - k
+    sse2 = _seg_sse(n2, sx_tot - sx1, tot_y - cy, sxx_tot - sxx1,
+                    tot_xy - cxy, tot_yy - cyy)
+
+    total = sse1 + sse2
+    valid = (k >= jnp.float32(omega)) & (k <= nf - jnp.float32(omega))
+    sse_ref[...] = jnp.where(valid, total, jnp.float32(jnp.inf))
+
+
+@functools.partial(jax.jit, static_argnames=("true_n", "omega", "block", "interpret"))
+def sse_scan(cy, cyy, cxy, totals, *, true_n: int, omega: int = 3,
+             block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """SSE for every candidate k from prefix sums (padded to a block multiple).
+
+    cy/cyy/cxy: (n_padded,) f32 prefix sums (pad region repeats the totals);
+    totals: (3,) f32 = [sum y, sum y^2, sum x*y]; true_n: unpadded length.
+    Returns sse: (n_padded,) f32 (+inf outside the probing window / padding).
+    """
+    n = cy.shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    kern = functools.partial(_kernel, block=block, n=true_n, omega=omega)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(cy, cyy, cxy, totals)

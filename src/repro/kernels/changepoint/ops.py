@@ -1,0 +1,54 @@
+"""Jit'd wrapper: sorted record times -> change-point via the Pallas SSE scan.
+
+Numerical notes: y is centered (y - mean) before the prefix sums so the f32
+segment-SSE cancellations stay well-conditioned (centering shifts both
+segments' intercepts, leaving every SSE unchanged).  Prefix sums are computed
+in f64-equivalent fashion via jnp.cumsum on f32 — adequate for the profile
+sizes the estimator runs on (<= a few million records per task).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BLOCK, sse_scan
+
+__all__ = ["changepoint_pallas", "two_segment_sse_pallas"]
+
+
+def _prefix_inputs(y_sorted, block):
+    y = jnp.asarray(y_sorted, jnp.float32)
+    n = y.shape[0]
+    y = y - jnp.mean(y)  # centering: SSEs are translation-invariant
+    idx = jnp.arange(1, n + 1, dtype=jnp.float32)
+    cy = jnp.cumsum(y)
+    cyy = jnp.cumsum(y * y)
+    cxy = jnp.cumsum(idx * y)
+    totals = jnp.stack([cy[-1], cyy[-1], cxy[-1]])
+    pad = (-n) % block
+    if pad:
+        cy = jnp.concatenate([cy, jnp.broadcast_to(cy[-1], (pad,))])
+        cyy = jnp.concatenate([cyy, jnp.broadcast_to(cyy[-1], (pad,))])
+        cxy = jnp.concatenate([cxy, jnp.broadcast_to(cxy[-1], (pad,))])
+    return cy, cyy, cxy, totals, n
+
+
+@functools.partial(jax.jit, static_argnames=("omega", "block", "interpret"))
+def two_segment_sse_pallas(y_sorted, omega: int = 3, block: int = DEFAULT_BLOCK,
+                           interpret: bool = True):
+    cy, cyy, cxy, totals, n = _prefix_inputs(y_sorted, block)
+    sse = sse_scan(cy, cyy, cxy, totals, true_n=n, omega=omega, block=block,
+                   interpret=interpret)
+    return sse[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("omega", "block", "interpret"))
+def changepoint_pallas(y_sorted, omega: int = 3, block: int = DEFAULT_BLOCK,
+                       interpret: bool = True):
+    """t-hat (1-indexed prefix size), matching ``core.estimate_changepoint``."""
+    sse = two_segment_sse_pallas(y_sorted, omega=omega, block=block,
+                                 interpret=interpret)
+    return (jnp.argmin(sse) + 1).astype(jnp.int32)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the two-segment SSE scan (paper §4.3).
+
+This re-exports the O(n) prefix-sum formulation from ``repro.core`` — the
+kernel must match it exactly (same closed forms, same masking).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.changepoint import two_segment_sse
+
+__all__ = ["two_segment_sse_ref", "changepoint_ref"]
+
+
+def two_segment_sse_ref(y_sorted: jax.Array, omega: int = 3) -> jax.Array:
+    return two_segment_sse(y_sorted, omega=omega)
+
+
+def changepoint_ref(y_sorted: jax.Array, omega: int = 3) -> jax.Array:
+    sse = two_segment_sse_ref(y_sorted, omega=omega)
+    return (jnp.argmin(sse) + 1).astype(jnp.int32)

@@ -1,0 +1,156 @@
+"""Pallas TPU flash attention (causal / sliding-window, GQA).
+
+Online-softmax attention with explicit BlockSpec VMEM tiling:
+
+  grid = (B, H, nQ, nK)   — nK is the innermost ("arbitrary") dimension;
+  q block   (1, 1, BQ, D) indexed (b, h, iq, 0)
+  k/v block (1, 1, BK, D) indexed (b, h // group, ik, 0)   — GQA head map
+  out block (1, 1, BQ, D) indexed (b, h, iq, 0)
+  scratch: m (BQ,), l (BQ,), acc (BQ, D) f32 VMEM persisting across nK.
+
+Causal/SWA block skipping: blocks entirely above the diagonal (or entirely
+outside the window) are skipped with pl.when — compute is O(S*W) for SWA.
+Block sizes default to 128x128 (MXU-aligned).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = float(-1e30)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int, bq: int, bk: int,
+            nk: int, seq_len: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q0 = iq * bq
+    k0 = ik * bk
+    # static-shape positions for masking
+    qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # Block-level skip: causal => k0 > q_end is dead; SWA => k_end < q0-window.
+    def live_block():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (BQ, BK)
+        mask = kpos < seq_len
+        if causal:
+            mask &= qpos >= kpos
+        if window > 0:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = m_new
+
+    if causal or window > 0:
+        q_end = q0 + bq - 1
+        dead = k0 > q_end
+        if window > 0:
+            dead |= (k0 + bk - 1) < (q0 - window + 1)
+        pl.when(jnp.logical_not(dead))(live_block)
+    else:
+        live_block()
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: (B, S, H, D); k/v: (B, S, KH, D), H % KH == 0. Returns (B, S, H, D).
+
+    S is padded internally to a block multiple; padded keys are masked out.
+    """
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    assert h % kh == 0
+    group = h // kh
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    pad = (-s) % max(bq, bk)
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nq, nk = sp // bq, sp // bk
+
+    # (B, H, S, D) layout for clean blocking
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, bq=bq, bk=bk,
+        nk=nk, seq_len=s,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, iq, ik, g=group: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, iq, ik, g=group: (b_, h_ // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = jnp.moveaxis(out, 1, 2)
+    return out[:, :s]

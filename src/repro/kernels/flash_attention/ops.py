@@ -1,0 +1,5 @@
+"""Jit'd public wrapper for the flash attention kernel."""
+
+from .kernel import flash_attention
+
+__all__ = ["flash_attention"]

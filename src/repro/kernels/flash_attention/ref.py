@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for flash attention: dense masked softmax attention."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None) -> jax.Array:
+    """q: (B,S,H,D); k/v: (B,S,KH,D). f32 softmax, dense masks."""
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    pos = jnp.arange(s)
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= pos[:, None] >= pos[None, :]
+    if window > 0:
+        mask &= pos[:, None] - pos[None, :] < window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,21 @@
+"""Jit'd wrapper for the SSD kernel, taking model-layer conventions
+(A_log, D) and handling the -exp(A_log) precompute."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan
+
+__all__ = ["ssd"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, a_log, b, c, d, *, chunk: int = 64, interpret: bool = True):
+    """Mamba2 SSD, kernel-backed.  Signature mirrors ``ref.ssd_ref``."""
+    a_neg = -jnp.exp(a_log.astype(jnp.float32))
+    return ssd_scan(x, dt, a_neg, b, c,
+                    d.astype(jnp.float32), chunk=chunk, interpret=interpret)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the Mamba2 SSD recurrence: literal stepwise scan.
+
+    h_t = exp(dt_t * a_h) * h_{t-1} + dt_t * x_t (outer) b_t
+    y_t = c_t . h_t + d_h * x_t
+
+x: (B,T,H,P)  dt: (B,T,H)  a_log: (H,)  b,c: (B,T,N)  d: (H,) -> y: (B,T,H,P)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_ref"]
+
+
+def ssd_ref(x, dt, a_log, b, c, d) -> jax.Array:
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+
+    def step(hprev, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        dec = jnp.exp(dtt * a)  # (B,H)
+        hnew = hprev * dec[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtt, xt, bt
+        )
+        yt = jnp.einsum("bn,bhpn->bhp", ct, hnew)
+        return hnew, yt
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(bf, 1, 0),
+        jnp.moveaxis(cf, 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + d.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype)

@@ -1,0 +1,65 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation),
+plus the jit sharding bundles for train / prefill / decode steps."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ArchConfig, ShapeSpec
+from ..models import init_cache, init_params
+from ..optim.adamw import init_opt_state
+
+__all__ = ["input_specs", "params_shape", "opt_shape", "cache_shape"]
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Batch ShapeDtypeStructs for an (arch x shape) cell.
+
+    train  : tokens/embeddings + labels
+    prefill: tokens/embeddings only
+    decode : one new token (B, 1) + scalar position
+    """
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        return {"tokens": sds((b, 1), jnp.int32), "pos": sds((), jnp.int32)}
+
+    batch: Dict[str, Any] = {}
+    if cfg.frontend == "audio_frames":
+        batch["embeddings"] = sds((b, s, cfg.d_model), dtype)
+        if shape.kind == "train":
+            batch["labels"] = sds((b, s), jnp.int32)
+        return batch
+    if cfg.frontend == "vision_patches":
+        fs = min(cfg.frontend_seq, s // 2)
+        batch["embeddings"] = sds((b, fs, cfg.d_model), dtype)
+        batch["tokens"] = sds((b, s - fs), jnp.int32)
+        if shape.kind == "train":
+            batch["labels"] = sds((b, s - fs), jnp.int32)
+        return batch
+    batch["tokens"] = sds((b, s), jnp.int32)
+    if shape.kind == "train":
+        batch["labels"] = sds((b, s), jnp.int32)
+    return batch
+
+
+def params_shape(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(init_params, cfg, dtype=dtype), jax.random.PRNGKey(0)
+    )
+
+
+def opt_shape(p_shape, moment_dtype=jnp.float32):
+    return jax.eval_shape(
+        functools.partial(init_opt_state, moment_dtype=moment_dtype), p_shape
+    )
+
+
+def cache_shape(cfg: ArchConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, s_max, dtype=dtype)
+    )

@@ -1,0 +1,195 @@
+"""Step factories: jit-able train / prefill / decode steps with the sharding
+rules applied at the jit boundary (in_shardings/out_shardings + donation)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from ..distributed.sharding import (
+    MeshAxes,
+    batch_specs,
+    cache_specs,
+    opt_state_specs,
+    param_specs,
+)
+from ..models import ShardCtx, decode_step, loss_fn, prefill
+from ..models.layers import NULL_CTX
+from ..optim.adamw import AdamWConfig, adamw_update
+
+__all__ = ["make_ctx", "make_train_step", "make_prefill_step", "make_decode_step",
+           "jit_train_step", "jit_prefill_step", "jit_decode_step"]
+
+
+def make_ctx(mesh) -> ShardCtx:
+    if mesh is None:
+        return NULL_CTX
+    ax = MeshAxes(mesh)
+    return ShardCtx(mesh=mesh, dp_axes=ax.dp, tp_axis=ax.tp)
+
+
+def make_train_step(cfg, mesh=None, *, opt_cfg: AdamWConfig = AdamWConfig(),
+                    remat: str = "full", q_chunk: int = 1024,
+                    unroll: bool = False, aux_weight: float = 0.01,
+                    n_micro: int = 1):
+    """n_micro > 1 => gradient accumulation over microbatches (splits the
+    global batch on axis 0), the standard lever for fitting activation
+    memory.  The dry-run auto-tunes it per cell."""
+    ctx = make_ctx(mesh)
+
+    def one_loss(params, mb):
+        def lf(p):
+            return loss_fn(cfg, p, mb, ctx, remat=remat, q_chunk=q_chunk,
+                           unroll=unroll, aux_weight=aux_weight)
+
+        (loss, parts), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        return loss, parts, grads
+
+    def train_step(params, opt, batch):
+        if n_micro == 1:
+            loss, parts, grads = one_loss(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda a: a.reshape((n_micro, a.shape[0] // n_micro) + a.shape[1:]),
+                batch,
+            )
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            if ctx.mesh is not None:
+                # ZeRO-shard the f32 accumulator (with replicated weights it
+                # would otherwise replicate a params-sized f32 buffer)
+                ax_ = MeshAxes(ctx.mesh)
+                zsp = opt_state_specs(params, ax_, cfg)
+                acc0 = jax.tree.map(
+                    lambda z, sp: jax.lax.with_sharding_constraint(
+                        z, NamedSharding(ctx.mesh, sp)), acc0, zsp)
+
+            def mb_body(carry, mb):
+                acc, loss_acc = carry
+                loss, parts, grads = one_loss(params, mb)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / n_micro, acc, grads
+                )
+                return (acc, loss_acc + loss / n_micro), parts
+
+            if unroll:
+                acc, loss = acc0, 0.0
+                for i in range(n_micro):
+                    mb = jax.tree.map(lambda a: a[i], micro)
+                    (acc, loss), parts = mb_body((acc, loss), mb)
+            else:
+                (acc, loss), parts = jax.lax.scan(
+                    mb_body, (acc0, jnp.zeros((), jnp.float32)), micro
+                )
+                parts = jax.tree.map(lambda x: x[-1], parts)
+            grads = acc
+        new_params, new_opt, om = adamw_update(opt_cfg, params, grads, opt)
+        metrics = {"loss": loss, **parts, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, mesh=None, *, q_chunk: int = 1024,
+                      unroll: bool = False, n_micro: int = 1):
+    """n_micro > 1 => chunked prefill (split the prompt batch, concat caches)
+    — the standard serving lever for prefill activation memory."""
+    ctx = make_ctx(mesh)
+
+    def one(params, cache, batch):
+        if not cfg.supports_decode:  # encoder: prefill == forward logits
+            from ..models import forward
+
+            logits, _ = forward(cfg, params, batch, ctx, remat="none",
+                                q_chunk=q_chunk, unroll=unroll)
+            return logits[:, -1], cache
+        return prefill(cfg, params, cache, batch, ctx, q_chunk=q_chunk,
+                       unroll=unroll)
+
+    def prefill_step(params, cache, batch):
+        if n_micro == 1:
+            return one(params, cache, batch)
+        b = jax.tree.leaves(batch)[0].shape[0]
+        bb = b // n_micro
+        outs = []
+        for i in range(n_micro):
+            mb = jax.tree.map(lambda a: a[i * bb:(i + 1) * bb], batch)
+            sub = jax.tree.map(
+                lambda a: jnp.zeros(a.shape[:1] + (a.shape[1] // n_micro,)
+                                    + a.shape[2:], a.dtype), cache)
+            outs.append(one(params, sub, mb))
+        logits = jnp.concatenate([o[0] for o in outs], axis=0)
+        if not cfg.supports_decode:
+            return logits, cache
+        new_cache = jax.tree.map(
+            lambda *cs: jnp.concatenate(cs, axis=1), *[o[1] for o in outs])
+        return logits, new_cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg, mesh=None, *, unroll: bool = False):
+    ctx = make_ctx(mesh)
+
+    def step(params, cache, tokens, pos):
+        return decode_step(cfg, params, cache, tokens, pos, ctx, unroll=unroll)
+
+    return step
+
+
+# --------------------------------------------------------------- jit bundling
+def _named(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree)
+
+
+def jit_train_step(cfg, mesh, p_shape, o_shape, b_shape, **kw):
+    """jit(train_step) with FSDP/TP/ZeRO shardings + state donation."""
+    ax = MeshAxes(mesh)
+    ps = _named(mesh, param_specs(p_shape, ax, cfg))
+    os_ = _named(mesh, opt_state_specs(p_shape, ax, cfg))
+    from ..optim.adamw import OptState
+    from jax.sharding import PartitionSpec as P
+
+    o_shard = OptState(step=NamedSharding(mesh, P()), mu=os_, nu=os_)
+    bs = _named(mesh, batch_specs(cfg, ax, b_shape))
+    fn = make_train_step(cfg, mesh, **kw)
+    return jax.jit(
+        fn,
+        in_shardings=(ps, o_shard, bs),
+        out_shardings=(ps, o_shard, None),
+        donate_argnums=(0, 1),
+    )
+
+
+def jit_prefill_step(cfg, mesh, p_shape, c_shape, b_shape, **kw):
+    ax = MeshAxes(mesh)
+    ps = _named(mesh, param_specs(p_shape, ax, cfg))
+    cs = _named(mesh, cache_specs(c_shape, ax, cfg))
+    bs = _named(mesh, batch_specs(cfg, ax, b_shape))
+    fn = make_prefill_step(cfg, mesh, **kw)
+    return jax.jit(
+        fn, in_shardings=(ps, cs, bs), out_shardings=(None, cs),
+        donate_argnums=(1,),
+    )
+
+
+def jit_decode_step(cfg, mesh, p_shape, c_shape, batch: int, **kw):
+    ax = MeshAxes(mesh)
+    ps = _named(mesh, param_specs(p_shape, ax, cfg))
+    cs = _named(mesh, cache_specs(c_shape, ax, cfg))
+    from jax.sharding import PartitionSpec as P
+
+    b_axis = ax.dp_spec() if batch % ax.dp_size == 0 else None
+    tok = NamedSharding(mesh, P(b_axis, None))
+    fn = make_decode_step(cfg, mesh, **kw)
+    return jax.jit(
+        fn,
+        in_shardings=(ps, cs, tok, NamedSharding(mesh, P())),
+        out_shardings=(None, cs),
+        donate_argnums=(1,),
+    )

@@ -1,0 +1,26 @@
+"""Model zoo substrate: pure-jnp blocks + segment-scanned full models."""
+
+from .layers import NULL_CTX, ShardCtx
+from .model import (
+    decode_step,
+    embed_inputs,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+    segments_of,
+)
+
+__all__ = [
+    "NULL_CTX",
+    "ShardCtx",
+    "decode_step",
+    "embed_inputs",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "prefill",
+    "segments_of",
+]

@@ -1,0 +1,367 @@
+"""Block-level assembly: attention blocks (GQA / SWA / MLA), Mamba2 blocks,
+pre-norm residual wiring, and their decode-step variants with caches."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .layers import NULL_CTX, ShardCtx
+
+# =============================================================== GQA attention
+
+
+def attn_init(key, cfg, dtype):
+    """Projections stored FLAT (D, H*Dh): the fused dim is always a multiple
+    of 128, so weights shard evenly over TP-16 even when the head count
+    doesn't (e.g. 40 heads); the per-head reshape happens in apply, where
+    GSPMD is free to pad the intermediate head sharding."""
+    d, kh, dh = cfg.d_model, cfg.num_kv_heads, cfg.head_dim
+    h = cfg.num_heads_padded
+    if cfg.attention == "mla":
+        return mla_init(key, cfg, dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], d, (h * dh,), dtype),
+        "wk": L.dense_init(ks[1], d, (kh * dh,), dtype),
+        "wv": L.dense_init(ks[2], d, (kh * dh,), dtype),
+        "wo": L.dense_init(ks[3], h * dh, (d,), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((kh * dh,), dtype)
+        p["bv"] = jnp.zeros((kh * dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def _head_mask(cfg, dtype):
+    """(Hp, 1) mask zeroing outputs of padded q heads (exact math)."""
+    hp, h = cfg.num_heads_padded, cfg.num_heads
+    if hp == h:
+        return None
+    return (jnp.arange(hp) < h).astype(dtype)[:, None]
+
+
+def _project_qkv(p, x, cfg, positions):
+    b, s, _ = x.shape
+    h, kh, dh = cfg.num_heads_padded, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, kh, dh)
+    v = v.reshape(b, s, kh, dh)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(p, x, cfg, ctx: ShardCtx = NULL_CTX, *, q_chunk: int = 1024,
+               unroll_chunks: bool = False):
+    """Full-sequence attention (train / prefill). x: (B,S,D)."""
+    if cfg.attention == "mla":
+        return mla_apply(p, x, cfg, ctx, q_chunk=q_chunk, unroll_chunks=unroll_chunks)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    # Force head-sharded attention internals (GSPMD pads 40 heads over 16).
+    q = ctx.constrain(q, ctx.dp, None, ctx.tp_axis, None)
+    k = ctx.constrain(k, ctx.dp, None, ctx.tp_axis, None)
+    v = ctx.constrain(v, ctx.dp, None, ctx.tp_axis, None)
+    window = cfg.swa_window if cfg.attention == "swa" else 0
+    o = L.attention(q, k, v, causal=cfg.causal, window=window, q_chunk=q_chunk,
+                    unroll_chunks=unroll_chunks)
+    o = ctx.constrain(o, ctx.dp, None, ctx.tp_axis, None)
+    hm = _head_mask(cfg, o.dtype)
+    if hm is not None:
+        o = o * hm
+    return o.reshape(b, s, -1) @ p["wo"]
+
+
+def attn_prefill(p, x, cfg, cache, *, q_chunk: int = 1024, unroll_chunks: bool = False):
+    """Prefill: run full attention AND fill the cache for positions [0, S)."""
+    if cfg.attention == "mla":
+        return mla_prefill(p, x, cfg, cache, q_chunk=q_chunk, unroll_chunks=unroll_chunks)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    window = cfg.swa_window if cfg.attention == "swa" else 0
+    o = L.attention(q, k, v, causal=cfg.causal, window=window, q_chunk=q_chunk,
+                    unroll_chunks=unroll_chunks)
+    hm = _head_mask(cfg, o.dtype)
+    if hm is not None:
+        o = o * hm
+    if "k_scale" in cache:
+        kq, ks = _kv_quant(k)
+        vq, vs = _kv_quant(v)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, 0, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, 0, axis=1),
+            "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], ks.astype(cache["k_scale"].dtype), 0, axis=1),
+            "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], vs.astype(cache["v_scale"].dtype), 0, axis=1),
+        }
+    else:
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, axis=1),
+        }
+    return o.reshape(b, s, -1) @ p["wo"], new_cache
+
+
+def attn_decode(p, x, cfg, cache, pos):
+    """One-token decode. x: (B,1,D); cache {"k","v"}: (B,S_max,KH,Dh); pos is
+    the index of the current token (cache holds pos valid entries before it)."""
+    if cfg.attention == "mla":
+        return mla_decode(p, x, cfg, cache, pos)
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    int8kv = "k_scale" in cache
+    if int8kv:
+        kq, ks = _kv_quant(k)
+        vq, vs = _kv_quant(v)
+        cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, pos, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, pos, axis=1),
+            "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], ks.astype(cache["k_scale"].dtype), pos, axis=1),
+            "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], vs.astype(cache["v_scale"].dtype), pos, axis=1),
+        }
+        kc = _kv_dequant(cache["k"], cache["k_scale"], x.dtype)
+        vc = _kv_dequant(cache["v"], cache["v_scale"], x.dtype)
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+        cache = {"k": kc, "v": vc}
+    window = cfg.swa_window if cfg.attention == "swa" else 0
+    o = L.decode_attention(q, kc, vc, pos + 1, window=window)
+    hm = _head_mask(cfg, o.dtype)
+    if hm is not None:
+        o = o * hm
+    return o.reshape(b, 1, -1) @ p["wo"], cache
+
+
+def attn_cache_shape(cfg, batch: int, s_max: int, dtype):
+    if cfg.attention == "mla":
+        return {
+            "ckv": jnp.zeros((batch, s_max, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, s_max, cfg.qk_rope_dim), dtype),
+        }
+    kh, dh = cfg.num_kv_heads, cfg.head_dim
+    if getattr(cfg, "kv_cache_dtype", "bf16") == "int8":
+        # per-token-per-head symmetric int8 quantization; scales in `dtype`
+        return {
+            "k": jnp.zeros((batch, s_max, kh, dh), jnp.int8),
+            "v": jnp.zeros((batch, s_max, kh, dh), jnp.int8),
+            "k_scale": jnp.zeros((batch, s_max, kh), dtype),
+            "v_scale": jnp.zeros((batch, s_max, kh), dtype),
+        }
+    return {
+        "k": jnp.zeros((batch, s_max, kh, dh), dtype),
+        "v": jnp.zeros((batch, s_max, kh, dh), dtype),
+    }
+
+
+def _kv_quant(x):
+    """x: (..., Dh) -> (int8 payload, scale (...,))."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _kv_dequant(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)).astype(dtype)
+
+
+# ================================================================ MLA (DSv2)
+
+
+def mla_init(key, cfg, dtype):
+    d, h = cfg.d_model, cfg.num_heads
+    nope, rope, vdim, lora = (
+        cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank,
+    )
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(ks[0], d, (h * (nope + rope),), dtype),
+        "wkv_a": L.dense_init(ks[1], d, (lora + rope,), dtype),
+        "kv_norm": jnp.ones((lora,), dtype),
+        "wkv_b": L.dense_init(ks[2], lora, (h * (nope + vdim),), dtype),
+        "wo": L.dense_init(ks[3], h * vdim, (d,), dtype),
+    }
+
+
+def _mla_qkv(p, x, cfg, positions):
+    b, s, _ = x.shape
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    lora = cfg.kv_lora_rank
+    q = (x @ p["wq"]).reshape(b, s, cfg.num_heads, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    kv_a = x @ p["wkv_a"]  # (B,S,lora+rope)
+    ckv, k_rope = kv_a[..., :lora], kv_a[..., lora:]
+    ckv = L.rms_norm(ckv, p["kv_norm"], cfg.norm_eps)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_apply(p, x, cfg, ctx: ShardCtx = NULL_CTX, *, q_chunk: int = 1024,
+              unroll_chunks: bool = False):
+    """Training/prefill MLA: materialize per-head K/V from the latent."""
+    b, s, _ = x.shape
+    nope, vdim = cfg.qk_nope_dim, cfg.v_head_dim
+    positions = jnp.arange(s)[None, :]
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(p, x, cfg, positions)
+    q_nope = ctx.constrain(q_nope, ctx.dp, None, ctx.tp_axis, None)
+    kv = (ckv @ p["wkv_b"]).reshape(b, s, cfg.num_heads, nope + vdim)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    h = k_nope.shape[2]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, cfg.qk_rope_dim))],
+        axis=-1,
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = ctx.constrain(k, ctx.dp, None, ctx.tp_axis, None)
+    v = ctx.constrain(v, ctx.dp, None, ctx.tp_axis, None)
+    scale = 1.0 / math.sqrt(nope + cfg.qk_rope_dim)
+    o = L.attention(q, k, v, causal=cfg.causal, q_chunk=q_chunk, scale=scale,
+                    unroll_chunks=unroll_chunks)
+    return o.reshape(b, s, h * vdim) @ p["wo"]
+
+
+def mla_prefill(p, x, cfg, cache, *, q_chunk: int = 1024, unroll_chunks: bool = False):
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    _, _, ckv, k_rope = _mla_qkv(p, x, cfg, positions)
+    out = mla_apply(p, x, cfg, q_chunk=q_chunk, unroll_chunks=unroll_chunks)  # noqa: ctx default
+    cc = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, axis=1)
+    kc = jax.lax.dynamic_update_slice_in_dim(cache["krope"], k_rope.astype(cache["krope"].dtype), 0, axis=1)
+    return out, {"ckv": cc, "krope": kc}
+
+
+def mla_decode(p, x, cfg, cache, pos):
+    """Absorbed MLA decode: attention runs in the latent (lora) space —
+    scores = q_nope W_uk . c_kv + q_rope . k_rope; values stay latent until
+    the final W_uv @ W_o.  Cache per token is lora+rope floats (~576)."""
+    b = x.shape[0]
+    nope, rope, vdim, lora = (
+        cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank,
+    )
+    h = cfg.num_heads
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope, ckv_new, krope_new = _mla_qkv(p, x, cfg, positions)
+    cc = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new.astype(cache["ckv"].dtype), pos, axis=1)
+    kc = jax.lax.dynamic_update_slice_in_dim(cache["krope"], krope_new.astype(cache["krope"].dtype), pos, axis=1)
+
+    wkb = p["wkv_b"].reshape(lora, h, nope + vdim)
+    w_uk, w_uv = wkb[..., :nope], wkb[..., nope:]
+    q_lat = jnp.einsum("bqhn,lhn->bqhl", q_nope, w_uk)  # (B,1,H,lora)
+    s_lat = jnp.einsum("bqhl,bkl->bhqk", q_lat.astype(jnp.float32), cc.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhr,bkr->bhqk", q_rope.astype(jnp.float32), kc.astype(jnp.float32))
+    scale = 1.0 / math.sqrt(nope + rope)
+    s = (s_lat + s_rope) * scale
+    kpos = jnp.arange(cc.shape[1])
+    s = jnp.where((kpos < pos + 1)[None, None, None, :], s, -jnp.inf)
+    prob = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhqk,bkl->bqhl", prob, cc.astype(jnp.float32))
+    o = jnp.einsum("bqhl,lhv->bqhv", ctx_lat, w_uv.astype(jnp.float32)).astype(x.dtype)
+    return o.reshape(b, 1, h * vdim) @ p["wo"], {"ckv": cc, "krope": kc}
+
+
+# ========================================================== transformer block
+
+
+def block_init(key, cfg, dtype, *, moe: bool):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn_init(ks[0], cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+    }
+    if moe:
+        p["moe"] = L.moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def block_apply(p, x, cfg, ctx: ShardCtx = NULL_CTX, *, q_chunk: int = 1024,
+                unroll_chunks: bool = False):
+    """Pre-norm transformer block. Returns (x, aux_loss)."""
+    h = x + attn_apply(p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+                       ctx, q_chunk=q_chunk, unroll_chunks=unroll_chunks)
+    z = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, aux = L.moe_apply(p["moe"], z, cfg, ctx)
+    else:
+        y, aux = L.mlp_apply(p["mlp"], z, ctx), jnp.zeros((), jnp.float32)
+    return h + y, aux
+
+
+def block_decode(p, x, cfg, cache, pos, ctx: ShardCtx = NULL_CTX):
+    a, new_cache = attn_decode(p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                               cfg, cache, pos)
+    h = x + a
+    z = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, _ = L.moe_apply(p["moe"], z, cfg, ctx)
+    else:
+        y = L.mlp_apply(p["mlp"], z, ctx)
+    return h + y, new_cache
+
+
+def block_prefill(p, x, cfg, cache, ctx: ShardCtx = NULL_CTX, *, q_chunk: int = 1024,
+                  unroll_chunks: bool = False):
+    a, new_cache = attn_prefill(p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                                cfg, cache, q_chunk=q_chunk, unroll_chunks=unroll_chunks)
+    h = x + a
+    z = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, _ = L.moe_apply(p["moe"], z, cfg, ctx)
+    else:
+        y = L.mlp_apply(p["mlp"], z, ctx)
+    return h + y, new_cache
+
+
+# ================================================================ Mamba block
+
+
+def mamba_block_init(key, cfg, dtype):
+    return {"ln": jnp.ones((cfg.d_model,), dtype), "mixer": L.mamba_init(key, cfg, dtype)}
+
+
+def mamba_block_apply(p, x, cfg, ctx: ShardCtx = NULL_CTX, *,
+                      sequential: bool = False):
+    return x + L.mamba_apply(p["mixer"], L.rms_norm(x, p["ln"], cfg.norm_eps),
+                             cfg, sequential=sequential, ctx=ctx)
+
+
+def mamba_block_decode(p, x, cfg, state):
+    y, new_state = L.mamba_decode_step(p["mixer"], L.rms_norm(x, p["ln"], cfg.norm_eps),
+                                       cfg, state)
+    return x + y, new_state
+
+
+def mamba_state_shape(cfg, batch: int, dtype):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }

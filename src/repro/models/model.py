@@ -1,0 +1,442 @@
+"""Full-model assembly: segments of homogeneous blocks scanned with stacked
+parameters (compile time independent of depth), embeddings/head, loss, and
+decode-step with per-segment caches.
+
+Segment layout per family:
+  dense/vlm/audio : [("dense", L)]
+  moe             : [("dense", first_dense_layers), ("moe", L - fd)]
+  ssm             : [("mamba", L)]
+  hybrid (zamba2) : [("zamba", L)] + 2 shared attention blocks applied every
+                    k-th layer (alternating), each application with its own
+                    KV-cache slot.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import blocks as B
+from . import layers as L
+from .layers import NULL_CTX, ShardCtx
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ structure
+def segments_of(cfg) -> Tuple[Tuple[str, int], ...]:
+    if cfg.family == "ssm":
+        return (("mamba", cfg.num_layers),)
+    if cfg.family == "hybrid":
+        return (("zamba", cfg.num_layers),)
+    if cfg.is_moe:
+        fd = cfg.first_dense_layers
+        segs = []
+        if fd:
+            segs.append(("dense", fd))
+        segs.append(("moe", cfg.num_layers - fd))
+        return tuple(segs)
+    return (("dense", cfg.num_layers),)
+
+
+def _stack_init(init_fn, key, count: int):
+    keys = jax.random.split(key, count)
+    return jax.vmap(init_fn)(keys)
+
+
+def init_params(cfg, key, dtype=jnp.bfloat16) -> Params:
+    keys = jax.random.split(key, 8)
+    vp = getattr(cfg, "vocab_padded", cfg.vocab_size)
+    p: Params = {"embed": L.embed_init(keys[0], vp, cfg.d_model, dtype)}
+    for i, (kind, count) in enumerate(segments_of(cfg)):
+        if kind == "dense":
+            fn = lambda k: B.block_init(k, cfg, dtype, moe=False)
+        elif kind == "moe":
+            fn = lambda k: B.block_init(k, cfg, dtype, moe=True)
+        else:  # mamba / zamba backbone
+            fn = lambda k: B.mamba_block_init(k, cfg, dtype)
+        p[f"seg{i}"] = _stack_init(fn, keys[1 + i], count)
+    if cfg.family == "hybrid":
+        p["shared_attn"] = _stack_init(
+            lambda k: B.block_init(k, cfg, dtype, moe=False),
+            keys[6],
+            cfg.n_shared_attn_blocks,
+        )
+    p["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        p["head"] = L.dense_init(keys[7], cfg.d_model, (vp,), dtype)
+    return p
+
+
+# ------------------------------------------------------------------ embedding
+def embed_inputs(cfg, params, batch) -> jax.Array:
+    """Token / frontend-stub embedding.  VLM: patch embeddings occupy the
+    first frontend_seq positions, text tokens the rest.  Audio: the whole
+    sequence arrives as precomputed frame embeddings."""
+    if cfg.frontend == "audio_frames":
+        return batch["embeddings"]
+    tok = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.frontend == "vision_patches":
+        emb = batch["embeddings"].astype(tok.dtype)  # (B, fs, D)
+        return jnp.concatenate([emb, tok], axis=1)
+    return tok
+
+
+def _n_attn_apps(cfg) -> int:
+    return -(-cfg.num_layers // cfg.hybrid_attn_every)  # ceil
+
+
+def _mask_pad_logits(cfg, logits):
+    """-inf on the padded vocab tail (vocab_padded > vocab_size)."""
+    vp = logits.shape[-1]
+    if vp == cfg.vocab_size:
+        return logits
+    col = jnp.arange(vp)
+    neg = jnp.asarray(jnp.finfo(jnp.float32).min, logits.dtype)
+    return jnp.where(col < cfg.vocab_size, logits, neg)
+
+
+# -------------------------------------------------------------------- forward
+def forward(
+    cfg,
+    params: Params,
+    batch,
+    ctx: ShardCtx = NULL_CTX,
+    *,
+    remat: str = "full",
+    q_chunk: int = 1024,
+    unroll: bool = False,
+):
+    """Returns (logits (B,S,V), aux_loss scalar)."""
+    x = embed_inputs(cfg, params, batch)
+    x = ctx.constrain(x, ctx.dp, None, None)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for i, (kind, count) in enumerate(segments_of(cfg)):
+        stacked = params[f"seg{i}"]
+        if kind in ("dense", "moe"):
+
+            def body(h, lp):
+                out, aux = B.block_apply(lp, h, cfg, ctx, q_chunk=q_chunk,
+                                         unroll_chunks=unroll)
+                return out, aux
+
+        elif kind == "mamba":
+
+            def body(h, lp):
+                return (B.mamba_block_apply(lp, h, cfg, ctx),
+                        jnp.zeros((), jnp.float32))
+
+        else:  # zamba: shared attention every k-th layer, alternating blocks
+            shared = params["shared_attn"]
+            every, nshared = cfg.hybrid_attn_every, cfg.n_shared_attn_blocks
+
+            def body(h, lp_idx):
+                lp, idx = lp_idx
+
+                def with_attn(hh):
+                    sel = (idx // every) % nshared
+                    sp = jax.tree.map(lambda a: a[sel], shared)
+                    out, _ = B.block_apply(sp, hh, cfg, ctx, q_chunk=q_chunk,
+                                           unroll_chunks=unroll)
+                    return out
+
+                h = lax.cond(idx % every == 0, with_attn, lambda hh: hh, h)
+                return (B.mamba_block_apply(lp, h, cfg, ctx),
+                        jnp.zeros((), jnp.float32))
+
+        if remat == "full":
+            body = jax.checkpoint(body)
+        elif remat == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+            )
+
+        xs = (stacked, jnp.arange(count)) if kind == "zamba" else stacked
+        # Sequence-parallel residual layout between blocks: the remat-saved
+        # carry is sharded over (dp, tp) so residual memory scales with the
+        # full chip count (GSPMD inserts the Megatron-SP gather/scatter).
+        if unroll:
+            for li in range(count):
+                x = ctx.constrain(x, ctx.dp, ctx.tp_axis, None)
+                lp = jax.tree.map(lambda a: a[li], stacked)
+                x, aux = body(x, (lp, jnp.asarray(li)) if kind == "zamba" else lp)
+                aux_total = aux_total + aux
+        else:
+
+            def scan_body(carry, inp):
+                h, acc = carry
+                h = ctx.constrain(h, ctx.dp, ctx.tp_axis, None)
+                h, aux = body(h, inp)
+                return (h, acc + aux), None
+
+            (x, aux_total), _ = lax.scan(scan_body, (x, aux_total), xs)
+        x = ctx.constrain(x, ctx.dp, None, None)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = x @ params["head"]
+    logits = ctx.constrain(logits, ctx.dp, None, ctx.tp_axis)
+    return logits, aux_total
+
+
+# ----------------------------------------------------------------------- loss
+def loss_fn(
+    cfg,
+    params: Params,
+    batch,
+    ctx: ShardCtx = NULL_CTX,
+    *,
+    remat: str = "full",
+    q_chunk: int = 1024,
+    unroll: bool = False,
+    aux_weight: float = 0.01,
+):
+    """Next-token (or frame-label) cross entropy, vocab-shard friendly:
+    the label logit is taken via a one-hot einsum so GSPMD keeps the vocab
+    dimension sharded (no full-logits gather)."""
+    logits, aux = forward(
+        cfg, params, batch, ctx, remat=remat, q_chunk=q_chunk, unroll=unroll
+    )
+    labels = batch["labels"]  # (B, S_out) int32, -1 => ignore
+    if logits.shape[1] != labels.shape[1]:  # vlm: loss over text tail only
+        logits = logits[:, logits.shape[1] - labels.shape[1] :]
+    lf = _mask_pad_logits(cfg, logits.astype(jnp.float32))
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), lf.shape[-1], dtype=lf.dtype)
+    ll = jnp.einsum("bsv,bsv->bs", lf, onehot)
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------- cache
+def init_cache(cfg, batch: int, s_max: int, dtype=jnp.bfloat16):
+    """Per-segment stacked caches for decode."""
+    cache: Dict[str, Any] = {}
+    for i, (kind, count) in enumerate(segments_of(cfg)):
+        if kind in ("dense", "moe"):
+            one = B.attn_cache_shape(cfg, batch, s_max, dtype)
+            cache[f"seg{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (count,) + a.shape).copy(), one
+            )
+        elif kind == "mamba":
+            one = B.mamba_state_shape(cfg, batch, dtype)
+            cache[f"seg{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (count,) + a.shape).copy(), one
+            )
+        else:  # zamba: mamba states for all layers + attn cache per application
+            st = B.mamba_state_shape(cfg, batch, dtype)
+            cache[f"seg{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (count,) + a.shape).copy(), st
+            )
+            ac = B.attn_cache_shape(cfg, batch, s_max, dtype)
+            napps = _n_attn_apps(cfg)
+            cache["shared_attn"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (napps,) + a.shape).copy(), ac
+            )
+    return cache
+
+
+# --------------------------------------------------------------------- decode
+def decode_step(cfg, params: Params, cache, tokens, pos, ctx: ShardCtx = NULL_CTX,
+                *, unroll: bool = False):
+    """One decode step.  tokens: (B, 1) int32; pos: scalar index of the token
+    being generated.  Returns (logits (B, V), new_cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    new_cache = dict(cache)
+
+    def _unrolled(body, x, stacked, seg_cache, count):
+        cs = []
+        for li in range(count):
+            lp = jax.tree.map(lambda a: a[li], stacked)
+            c = jax.tree.map(lambda a: a[li], seg_cache)
+            x, cn = body(x, (lp, c))
+            cs.append(cn)
+        return x, jax.tree.map(lambda *a: jnp.stack(a), *cs)
+
+    for i, (kind, count) in enumerate(segments_of(cfg)):
+        stacked = params[f"seg{i}"]
+        seg_cache = cache[f"seg{i}"]
+        if kind in ("dense", "moe"):
+
+            def body(h, inp):
+                lp, c = inp
+                out, cnew = B.block_decode(lp, h, cfg, c, pos, ctx)
+                return out, cnew
+
+            if unroll:
+                x, cnew = _unrolled(body, x, stacked, seg_cache, count)
+            else:
+                x, cnew = lax.scan(body, x, (stacked, seg_cache))
+            new_cache[f"seg{i}"] = cnew
+        elif kind == "mamba":
+
+            def body(h, inp):
+                lp, st = inp
+                out, snew = B.mamba_block_decode(lp, h, cfg, st)
+                return out, snew
+
+            if unroll:
+                x, cnew = _unrolled(body, x, stacked, seg_cache, count)
+            else:
+                x, cnew = lax.scan(body, x, (stacked, seg_cache))
+            new_cache[f"seg{i}"] = cnew
+        else:  # zamba
+            shared = params["shared_attn"]
+            attn_cache = cache["shared_attn"]
+            every, nshared = cfg.hybrid_attn_every, cfg.n_shared_attn_blocks
+
+            if unroll:
+                sns = []
+                for li in range(count):
+                    if li % every == 0:
+                        app, sel = li // every, (li // every) % nshared
+                        sp = jax.tree.map(lambda a: a[sel], shared)
+                        c_app = jax.tree.map(lambda a: a[app], attn_cache)
+                        x, cn = B.block_decode(sp, x, cfg, c_app, pos, ctx)
+                        attn_cache = jax.tree.map(
+                            lambda a, c: a.at[app].set(c), attn_cache, cn
+                        )
+                    lp = jax.tree.map(lambda a: a[li], stacked)
+                    st = jax.tree.map(lambda a: a[li], seg_cache)
+                    x, sn = B.mamba_block_decode(lp, x, cfg, st)
+                    sns.append(sn)
+                snew = jax.tree.map(lambda *a: jnp.stack(a), *sns)
+            else:
+
+                def body(carry, inp):
+                    h, ac = carry
+                    lp, st, idx = inp
+
+                    def with_attn(args):
+                        hh, acc = args
+                        app = idx // every
+                        sel = app % nshared
+                        sp = jax.tree.map(lambda a: a[sel], shared)
+                        c_app = jax.tree.map(lambda a: a[app], acc)
+                        out, cnew = B.block_decode(sp, hh, cfg, c_app, pos, ctx)
+                        acc = jax.tree.map(
+                            lambda a, cn: a.at[app].set(cn), acc, cnew
+                        )
+                        return out, acc
+
+                    h, ac = lax.cond(idx % every == 0, with_attn, lambda a: a, (h, ac))
+                    h, snew = B.mamba_block_decode(lp, h, cfg, st)
+                    return (h, ac), snew
+
+                (x, attn_cache), snew = lax.scan(
+                    body, (x, attn_cache), (stacked, seg_cache, jnp.arange(count))
+                )
+            new_cache[f"seg{i}"] = snew
+            new_cache["shared_attn"] = attn_cache
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = x @ params["head"]
+    return _mask_pad_logits(cfg, logits)[:, 0], new_cache
+
+
+def prefill(cfg, params: Params, cache, batch, ctx: ShardCtx = NULL_CTX,
+            *, q_chunk: int = 1024, unroll: bool = False):
+    """Prefill the cache from a full prompt; returns (last-token logits, cache).
+
+    (Used by serve paths; attention segments write K/V for all positions.)"""
+    x = embed_inputs(cfg, params, batch)
+    x = ctx.constrain(x, ctx.dp, None, None)
+    new_cache = dict(cache)
+    for i, (kind, count) in enumerate(segments_of(cfg)):
+        stacked = params[f"seg{i}"]
+        if kind in ("dense", "moe"):
+            seg_cache = cache[f"seg{i}"]
+
+            def body(h, inp):
+                lp, c = inp
+                h = ctx.constrain(h, ctx.dp, None, None)
+                out, cnew = B.block_prefill(lp, h, cfg, c, ctx, q_chunk=q_chunk,
+                                            unroll_chunks=unroll)
+                return out, cnew
+
+            if unroll:
+                cs = []
+                for li in range(count):
+                    lp = jax.tree.map(lambda a: a[li], stacked)
+                    c = jax.tree.map(lambda a: a[li], seg_cache)
+                    x, cn = body(x, (lp, c))
+                    cs.append(cn)
+                cnew = jax.tree.map(lambda *a: jnp.stack(a), *cs)
+            else:
+                x, cnew = lax.scan(body, x, (stacked, seg_cache))
+            new_cache[f"seg{i}"] = cnew
+        else:
+            # SSM segments: sequential chunk-scan SSD when rolled (live set =
+            # one chunk; the vectorized form's (B,NC,C,C,H) intermediates
+            # dominate 32k-prefill memory), vectorized when unrolled (cost
+            # compiles need the flops visible).  SSM prefill-*state* capture
+            # is exercised via decode; hybrid shared-attention caches ARE
+            # filled here (required for decode after prefill).
+            seq = not unroll
+            if kind == "zamba":
+                shared = params["shared_attn"]
+                attn_cache = cache["shared_attn"]
+                every, nshared = cfg.hybrid_attn_every, cfg.n_shared_attn_blocks
+
+                def zbody(carry, inp):
+                    h, ac = carry
+                    lp, idx = inp
+
+                    def with_attn(args):
+                        hh, acc = args
+                        app = idx // every
+                        sel = app % nshared
+                        sp = jax.tree.map(lambda a: a[sel], shared)
+                        c_app = jax.tree.map(lambda a: a[app], acc)
+                        out, cn = B.block_prefill(sp, hh, cfg, c_app, ctx,
+                                                  q_chunk=q_chunk,
+                                                  unroll_chunks=unroll)
+                        acc = jax.tree.map(lambda a, c: a.at[app].set(c), acc, cn)
+                        return out, acc
+
+                    h = ctx.constrain(h, ctx.dp, None, None)
+                    h, ac = lax.cond(idx % every == 0, with_attn,
+                                     lambda a: a, (h, ac))
+                    h = B.mamba_block_apply(lp, h, cfg, ctx, sequential=seq)
+                    return (h, ac), None
+
+                if unroll:
+                    for li in range(count):
+                        lp = jax.tree.map(lambda a: a[li], stacked)
+                        (x, attn_cache), _ = zbody((x, attn_cache),
+                                                   (lp, jnp.asarray(li)))
+                else:
+                    (x, attn_cache), _ = lax.scan(
+                        zbody, (x, attn_cache), (stacked, jnp.arange(count))
+                    )
+                new_cache["shared_attn"] = attn_cache
+            else:
+
+                def body(h, lp):
+                    h = ctx.constrain(h, ctx.dp, None, None)
+                    return B.mamba_block_apply(lp, h, cfg, ctx,
+                                               sequential=seq), None
+
+                if unroll:
+                    for li in range(count):
+                        lp = jax.tree.map(lambda a: a[li], stacked)
+                        x, _ = body(x, lp)
+                else:
+                    x, _ = lax.scan(body, x, stacked)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x[:, -1:], params["embed"])
+    else:
+        logits = x[:, -1:] @ params["head"]
+    return _mask_pad_logits(cfg, logits)[:, 0], new_cache

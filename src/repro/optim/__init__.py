@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, OptState, adamw_update, init_opt_state, lr_at
+
+__all__ = ["AdamWConfig", "OptState", "adamw_update", "init_opt_state", "lr_at"]

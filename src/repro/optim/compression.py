@@ -1,0 +1,84 @@
+"""Gradient compression for the slow cross-pod axis, with error feedback.
+
+At 1000+ nodes the pod-to-pod (DCN) reduction is the scarce bandwidth; int8
+block-quantized all-reduce with error feedback cuts it 4x vs f32 / 2x vs bf16
+with negligible convergence impact when the residual is carried:
+
+    q = quantize(g + e);  all_reduce(q);  e' = (g + e) - dequantize(q)
+
+Pure-jnp, shard_map-compatible (the reduce happens outside; this module only
+provides the codec + the error-feedback state).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["QuantState", "quantize_int8", "dequantize_int8", "init_error_feedback",
+           "compress_with_feedback", "decompress_and_update"]
+
+BLOCK = 256
+
+
+class QuantState(NamedTuple):
+    q: jax.Array  # int8 payload
+    scale: jax.Array  # f32 per-block scales
+
+
+def _pad_to_block(x: jax.Array) -> Tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat, pad
+
+
+def quantize_int8(g: jax.Array) -> QuantState:
+    flat, _ = _pad_to_block(g.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return QuantState(q=q, scale=scale[:, 0])
+
+
+def dequantize_int8(qs: QuantState, shape) -> jax.Array:
+    flat = (qs.q.astype(jnp.float32) * qs.scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(grads, errors):
+    """Returns (quantized pytree, new candidate errors pytree-of-f32)."""
+
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        qs = quantize_int8(target)
+        deq = dequantize_int8(qs, g.shape)
+        return qs, target - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(errors)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+def decompress_and_update(qtree, shapes_like):
+    def one(qs, like):
+        return dequantize_int8(qs, like.shape).astype(like.dtype)
+
+    flat_q = jax.tree.leaves(
+        qtree, is_leaf=lambda x: isinstance(x, QuantState)
+    )
+    flat_like, treedef = jax.tree.flatten(shapes_like)
+    return treedef.unflatten([one(q, l) for q, l in zip(flat_q, flat_like)])

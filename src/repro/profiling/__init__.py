@@ -1,0 +1,17 @@
+"""Profiling substrate: record-level timing (paper §5.2), ground-truth
+simulation (Fig. 4/5 cost model), and a real oversubscription harness
+(Table 2 regime)."""
+
+from .contention import make_record_work, run_contended_job
+from .recorder import PhaseTimer, RecordProfiler
+from .simulator import SimProfile, simulate_job, simulate_records
+
+__all__ = [
+    "make_record_work",
+    "run_contended_job",
+    "PhaseTimer",
+    "RecordProfiler",
+    "SimProfile",
+    "simulate_job",
+    "simulate_records",
+]

@@ -1,0 +1,3 @@
+from .straggler import SchedulerDecision, VetController
+
+__all__ = ["SchedulerDecision", "VetController"]

@@ -1,0 +1,86 @@
+"""Starfish-analogue config tuner, audited by vet (paper §5.5 context).
+
+Starfish searches Hadoop parameter space against a cost model; the analogue
+here grid-searches launcher knobs (microbatch count, record unit, q_chunk)
+against measured step time — then vet answers the paper's question: *how far
+from ideal is the tuned configuration still?*  (Paper Table 3: Starfish-tuned
+jobs still show vet 3.3-4.2.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import vet_task
+from ..data.pipeline import SyntheticTokenPipeline
+from ..models import init_params
+from ..optim.adamw import AdamWConfig, init_opt_state
+from ..profiling import RecordProfiler
+from .straggler import VetController
+
+__all__ = ["TuneCandidate", "tune"]
+
+
+@dataclasses.dataclass
+class TuneCandidate:
+    knobs: Dict
+    mean_step_s: float
+    vet: float
+    ei: float
+
+
+def tune(
+    cfg,
+    *,
+    batch: int = 8,
+    seq_len: int = 64,
+    steps_per_candidate: int = 30,
+    n_micro_options: Sequence[int] = (1, 2),
+    q_chunk_options: Sequence[int] = (32, 64),
+    seed: int = 0,
+    verbose: bool = True,
+) -> List[TuneCandidate]:
+    """Measure every knob combination; return candidates sorted by step time,
+    each annotated with its vet score (the optimality audit)."""
+    from ..launch.steps import make_train_step
+
+    pipe = SyntheticTokenPipeline(cfg.vocab_size, batch, seq_len, seed=seed,
+                                  d_model=cfg.d_model, frontend=cfg.frontend,
+                                  frontend_seq=max(cfg.frontend_seq, 0))
+    results = []
+    for n_micro, q_chunk in itertools.product(n_micro_options, q_chunk_options):
+        if batch % n_micro:
+            continue
+        params = init_params(cfg, jax.random.PRNGKey(seed), dtype=jnp.float32)
+        opt = init_opt_state(params)
+        step_fn = jax.jit(make_train_step(
+            cfg, None, opt_cfg=AdamWConfig(total_steps=steps_per_candidate),
+            q_chunk=q_chunk, n_micro=n_micro,
+        ))
+        prof = RecordProfiler(unit=1)
+        for s in range(steps_per_candidate):
+            b = {k: jnp.asarray(v) for k, v in pipe.batch_at(s).items()}
+            with prof.record():
+                params, opt, m = step_fn(params, opt, b)
+                jax.block_until_ready(m["loss"])
+        times = prof.record_times()[2:]  # drop compile steps
+        r = vet_task(times, buckets=min(64, max(8, times.size // 4)))
+        cand = TuneCandidate(
+            knobs={"n_micro": n_micro, "q_chunk": q_chunk},
+            mean_step_s=float(times.mean()),
+            vet=float(r.vet),
+            ei=float(r.ei),
+        )
+        results.append(cand)
+        if verbose:
+            print(f"[tune] {cand.knobs}: step {cand.mean_step_s*1e3:.1f}ms "
+                  f"vet {cand.vet:.2f}")
+    results.sort(key=lambda c: c.mean_step_s)
+    return results

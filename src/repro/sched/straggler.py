@@ -1,0 +1,111 @@
+"""Resource-aware scheduling driven by the vet measure (paper §5.5).
+
+The paper's rule: "given the number of tasks calculated as W, if the
+vet_task of the tasks is higher than W, the scheduler should reduce the
+number of tasks."  Generalized here into a controller that consumes live
+per-worker record profiles and emits concurrency / straggler decisions:
+
+  * vet_job >> 1 with EI stable   -> host is oversubscribed: lower worker
+    count (or microbatch concurrency) until vet approaches the knee.
+  * one worker's vet an outlier   -> straggler: flag for re-shard/eviction
+    (KS test against the pooled population confirms it is not noise).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core import ks_2samp, vet_job, vet_task
+
+__all__ = ["SchedulerDecision", "VetController"]
+
+
+@dataclass
+class SchedulerDecision:
+    target_workers: int
+    stragglers: List[int] = field(default_factory=list)
+    vet_job: float = 1.0
+    reason: str = ""
+
+
+class VetController:
+    """Windowed vet-based concurrency controller.
+
+    feed() per-worker record times; decide() returns the recommended worker
+    count and straggler set.  Hysteresis: only moves one step per decision,
+    and only when the vet signal clears the deadband.
+    """
+
+    def __init__(
+        self,
+        n_workers: int,
+        *,
+        min_workers: int = 1,
+        max_workers: Optional[int] = None,
+        window_records: int = 200,
+        vet_high: float = 1.5,  # above the paper's W-rule knee => shrink
+        vet_low: float = 1.1,  # near-ideal => can grow
+        straggler_pvalue: float = 0.01,
+        straggler_ratio: float = 1.5,
+    ):
+        self.n_workers = n_workers
+        self.min_workers = min_workers
+        self.max_workers = max_workers or n_workers
+        self.window = window_records
+        self.vet_high = vet_high
+        self.vet_low = vet_low
+        self.straggler_pvalue = straggler_pvalue
+        self.straggler_ratio = straggler_ratio
+        self._buffers: Dict[int, List[float]] = {i: [] for i in range(n_workers)}
+
+    def feed(self, worker_id: int, record_times: Sequence[float]) -> None:
+        buf = self._buffers.setdefault(worker_id, [])
+        buf.extend(float(t) for t in record_times)
+        if len(buf) > self.window:
+            del buf[: len(buf) - self.window]
+
+    def ready(self) -> bool:
+        return all(len(b) >= 32 for b in self._buffers.values() if b is not None)
+
+    def decide(self) -> SchedulerDecision:
+        profiles = {i: np.asarray(b) for i, b in self._buffers.items() if len(b) >= 32}
+        if not profiles:
+            return SchedulerDecision(self.n_workers, reason="insufficient data")
+
+        jr = vet_job(list(profiles.values()), buckets=64)
+        vj = float(jr.vet_job)
+
+        # --- straggler detection: per-worker vet outliers confirmed by KS ---
+        vets = {i: float(r.vet) for i, r in zip(profiles, jr.tasks)}
+        med = float(np.median(list(vets.values())))
+        stragglers = []
+        pooled = np.concatenate(list(profiles.values()))
+        for i, v in vets.items():
+            if v > self.straggler_ratio * med and len(profiles) > 2:
+                ks = ks_2samp(profiles[i], pooled)
+                if ks.pvalue < self.straggler_pvalue:
+                    stragglers.append(i)
+
+        # --- paper's W-rule with hysteresis ---
+        target = self.n_workers
+        reason = "steady"
+        if vj > max(self.vet_high, float(self.n_workers)):
+            # vet above the worker count: hopelessly oversubscribed
+            target = max(self.min_workers, self.n_workers - 1)
+            reason = f"vet_job {vj:.2f} > workers {self.n_workers} (paper W-rule)"
+        elif vj > self.vet_high:
+            target = max(self.min_workers, self.n_workers - 1)
+            reason = f"vet_job {vj:.2f} > {self.vet_high}: shrink"
+        elif vj < self.vet_low and self.n_workers < self.max_workers:
+            target = self.n_workers + 1
+            reason = f"vet_job {vj:.2f} < {self.vet_low}: headroom, grow"
+
+        return SchedulerDecision(
+            target_workers=target, stragglers=stragglers, vet_job=vj, reason=reason
+        )
+
+    def apply(self, decision: SchedulerDecision) -> None:
+        self.n_workers = decision.target_workers

@@ -1,0 +1,46 @@
+"""CI-scale dry-run smoke: reduced configs compile on a 2x2 mesh in a
+subprocess (the production 16x16 / 2x16x16 sweep runs via
+``python -m repro.launch.dryrun --sweep``; its JSON is committed)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ARCHS = ["qwen3-14b", "deepseek-moe-16b", "mamba2-130m", "zamba2-7b",
+         "hubert-xlarge"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_cell_compiles_on_mesh(arch):
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+           "PYTHONPATH": "src"}
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--test-cell", arch],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-1500:]
+    payload = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert payload["status"] == "ok", payload
+    assert payload["temp_bytes"] > 0
+
+
+def test_committed_sweep_results_pass_gate():
+    """The committed production-mesh sweep must show every runnable cell ok
+    and within the HBM budget on BOTH meshes."""
+    path = os.path.join("benchmarks", "results", "dryrun.json")
+    if not os.path.exists(path):
+        pytest.skip("sweep results not generated yet")
+    d = json.load(open(path))
+    bad = {k: v.get("status") for k, v in d.items()
+           if v.get("status") not in ("ok", "skipped")}
+    assert not bad, bad
+    over = {k: v.get("peak_tpu_estimate_bytes")
+            for k, v in d.items()
+            if v.get("status") == "ok" and not v.get("fits_hbm", True)}
+    assert not over, over
+    n_ok = sum(1 for v in d.values() if v.get("status") == "ok")
+    assert n_ok >= 60  # 32 runnable cells x 2 meshes (sweep may be partial mid-run)

@@ -1,0 +1,42 @@
+"""Unit tests for the collective-bytes HLO parser."""
+
+from repro.distributed.hlo_analysis import collective_bytes
+
+
+HLO = """
+HloModule jit_step
+  %ag = bf16[16,4096,128]{2,1,0} all-gather(%x), replica_groups=...
+  %ar.1 = f32[1024,1024]{1,0} all-reduce-start(%y), channel_id=3
+  %done = f32[1024,1024]{1,0} all-reduce-done(%ar.1)
+  %tuple = (bf16[8,8]{1,0}, bf16[8,8]{1,0}) all-to-all(%a, %b)
+  %rs = f32[256]{0} reduce-scatter(%z)
+  %cp = s32[32,2]{1,0} collective-permute(%w)
+  %not_a_collective = f32[4]{0} add(%p, %q)
+"""
+
+
+def test_parses_kinds_and_bytes():
+    res = collective_bytes(HLO)
+    bk = res["bytes_by_kind"]
+    assert bk["all-gather"] == 16 * 4096 * 128 * 2
+    assert bk["all-reduce"] == 1024 * 1024 * 4  # -start counted, -done not
+    assert bk["all-to-all"] == 2 * 8 * 8 * 2
+    assert bk["reduce-scatter"] == 256 * 4
+    assert bk["collective-permute"] == 32 * 2 * 4
+    assert res["counts"]["all-reduce"] == 1
+
+
+def test_ring_factors():
+    res = collective_bytes(HLO)
+    expected = (16 * 4096 * 128 * 2  # AG x1
+                + 2 * 1024 * 1024 * 4  # AR x2
+                + 2 * 8 * 8 * 2  # A2A x1
+                + 256 * 4  # RS x1
+                + 32 * 2 * 4)  # CP x1
+    assert res["ici_bytes"] == expected
+
+
+def test_empty():
+    res = collective_bytes("HloModule empty\n  %r = f32[2]{0} add(%a, %b)\n")
+    assert res["ici_bytes"] == 0
+    assert res["counts"] == {}

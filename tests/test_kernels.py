@@ -1,0 +1,155 @@
+"""Per-kernel Pallas validation: shape/dtype sweeps, assert_allclose vs the
+pure-jnp oracles, interpret=True (kernel bodies executed in Python on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.changepoint import estimate_changepoint
+from repro.kernels.changepoint.ops import changepoint_pallas, two_segment_sse_pallas
+from repro.kernels.changepoint.ref import two_segment_sse_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ref import ssd_ref
+
+KEY = jax.random.PRNGKey(0)
+RNG = np.random.default_rng(0)
+
+
+# ------------------------------------------------------------ changepoint SSE
+class TestChangepointKernel:
+    @pytest.mark.parametrize("n", [300, 1024, 4096, 10_000])
+    @pytest.mark.parametrize("dtype", [np.float32, np.float64])
+    def test_sse_matches_ref(self, n, dtype):
+        k = int(n * 0.8)
+        y = np.sort(
+            np.concatenate([RNG.normal(1, 0.05, k), RNG.normal(4, 0.5, n - k)])
+        ).astype(dtype)
+        sse_k = np.asarray(two_segment_sse_pallas(jnp.asarray(y)))[: n]
+        sse_r = np.asarray(two_segment_sse_ref(jnp.asarray(y, jnp.float32)))
+        m = np.isfinite(sse_r)
+        assert np.isfinite(sse_k[m]).all()
+        np.testing.assert_allclose(sse_k[m], sse_r[m], rtol=5e-3, atol=1e-2)
+        # same inf mask inside the probing window
+        np.testing.assert_array_equal(np.isinf(sse_k[: n]), np.isinf(sse_r))
+
+    @pytest.mark.parametrize("n", [256, 2000, 8192])
+    def test_changepoint_matches_core(self, n):
+        k = int(n * 0.7)
+        y = np.sort(
+            np.concatenate([RNG.normal(1, 0.02, k), 3 + RNG.pareto(1.5, n - k)])
+        )
+        t_kernel = int(changepoint_pallas(jnp.asarray(y)))
+        t_core = int(estimate_changepoint(jnp.asarray(y)))
+        assert abs(t_kernel - t_core) <= max(2, int(0.01 * n))
+
+    @pytest.mark.parametrize("omega", [3, 10, 50])
+    def test_probing_window(self, omega):
+        y = np.sort(RNG.normal(1, 0.1, 1024))
+        t = int(changepoint_pallas(jnp.asarray(y), omega=omega))
+        assert omega <= t <= 1024 - omega
+
+
+# ------------------------------------------------------------ flash attention
+ATTN_SWEEP = [
+    # (B, S, H, KH, D, causal, window)
+    (1, 128, 4, 4, 64, True, 0),
+    (2, 256, 8, 2, 64, True, 0),  # GQA 4:1
+    (1, 256, 4, 1, 64, True, 0),  # MQA
+    (1, 384, 4, 2, 128, True, 128),  # SWA
+    (1, 256, 4, 4, 64, False, 0),  # bidirectional (encoder)
+    (1, 200, 4, 4, 64, True, 0),  # ragged S (padding path)
+]
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,s,h,kh,d,causal,window", ATTN_SWEEP)
+    def test_matches_ref_f32(self, b, s, h, kh, d, causal, window):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, kh, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, kh, d), jnp.float32)
+        out = flash_attention(q, k, v, causal=causal, window=window)
+        ref = attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_bf16(self):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 256, 4, 64), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (1, 256, 2, 64), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (1, 256, 2, 64), jnp.bfloat16)
+        out = flash_attention(q, k, v)
+        ref = attention_ref(q, k, v)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            rtol=2e-2, atol=2e-2,
+        )
+
+    @pytest.mark.parametrize("bq,bk", [(128, 128), (128, 256), (256, 128)])
+    def test_block_shapes(self, bq, bk):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 512, 2, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 512, 2, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 512, 2, 64), jnp.float32)
+        out = flash_attention(q, k, v, bq=bq, bk=bk)
+        ref = attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------------- SSD scan
+SSD_SWEEP = [
+    # (B, T, H, P, N, chunk)
+    (1, 128, 2, 64, 16, 64),
+    (2, 256, 4, 32, 64, 64),
+    (1, 128, 3, 16, 8, 32),
+    (1, 512, 2, 64, 128, 64),  # mamba2-130m state size
+]
+
+
+class TestSSD:
+    @pytest.mark.parametrize("b,t,h,p,n,chunk", SSD_SWEEP)
+    def test_matches_stepwise_ref(self, b, t, h, p, n, chunk):
+        ks = jax.random.split(KEY, 4)
+        x = jax.random.normal(ks[0], (b, t, h, p), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h), jnp.float32))
+        a_log = jnp.log(jnp.linspace(1.0, 8.0, h))
+        bb = jax.random.normal(ks[2], (b, t, n), jnp.float32)
+        cc = jax.random.normal(ks[3], (b, t, n), jnp.float32)
+        d = jnp.ones((h,))
+        out = ssd(x, dt, a_log, bb, cc, d, chunk=chunk)
+        ref = ssd_ref(x, dt, a_log, bb, cc, d)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_bf16_inputs(self):
+        ks = jax.random.split(KEY, 4)
+        x = jax.random.normal(ks[0], (1, 128, 2, 32), jnp.bfloat16)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 128, 2), jnp.float32))
+        a_log = jnp.log(jnp.linspace(1.0, 4.0, 2))
+        bb = jax.random.normal(ks[2], (1, 128, 16), jnp.bfloat16)
+        cc = jax.random.normal(ks[3], (1, 128, 16), jnp.bfloat16)
+        d = jnp.ones((2,))
+        out = ssd(x, dt, a_log, bb, cc, d, chunk=64)
+        ref = ssd_ref(x, dt, a_log, bb, cc, d)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            rtol=5e-2, atol=5e-2,
+        )
+
+    def test_state_continuity_across_chunks(self):
+        """Halving the chunk size must not change the result (state carry)."""
+        ks = jax.random.split(KEY, 4)
+        x = jax.random.normal(ks[0], (1, 256, 2, 32), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 256, 2), jnp.float32))
+        a_log = jnp.log(jnp.linspace(1.0, 4.0, 2))
+        bb = jax.random.normal(ks[2], (1, 256, 16), jnp.float32)
+        cc = jax.random.normal(ks[3], (1, 256, 16), jnp.float32)
+        d = jnp.zeros((2,))
+        o64 = ssd(x, dt, a_log, bb, cc, d, chunk=64)
+        o32 = ssd(x, dt, a_log, bb, cc, d, chunk=32)
+        np.testing.assert_allclose(np.asarray(o64), np.asarray(o32),
+                                   rtol=2e-4, atol=2e-4)

@@ -1,0 +1,77 @@
+"""Unit tests for the sharding rules: every assigned arch's parameter /
+optimizer / cache specs must be valid NamedShardings on the production mesh
+(no duplicate axes, even division at jit I/O) — the class of bugs that
+actually bit during bring-up (DuplicateSpecError, 40-head unevenness)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+CHECKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax, jax.numpy as jnp, dataclasses, json
+from repro.configs import get_config, ARCH_NAMES
+from repro.distributed.sharding import (MeshAxes, cache_specs, opt_state_specs,
+                                        param_specs)
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from jax.sharding import NamedSharding
+
+problems = []
+for multi in (False, True):
+    mesh = make_production_mesh(multi_pod=multi)
+    ax = MeshAxes(mesh)
+    for name in ARCH_NAMES:
+        cfg = dataclasses.replace(get_config(name), q_head_pad_multiple=16)
+        p_shape = S.params_shape(cfg)
+        for tag, specs, shapes in [
+            ("param", param_specs(p_shape, ax, cfg), p_shape),
+            ("opt", opt_state_specs(p_shape, ax, cfg), p_shape),
+        ]:
+            for (path, sp), leaf in zip(
+                jax.tree_util.tree_flatten_with_path(specs)[0][:10000],
+                jax.tree.leaves(shapes),
+            ):
+                try:
+                    ns = NamedSharding(mesh, sp)  # raises on duplicate axes
+                except Exception as e:
+                    problems.append((name, tag, str(path), str(e)[:80]))
+                    continue
+                # even division at jit I/O
+                entries = list(sp) + [None] * (len(leaf.shape) - len(sp))
+                for dim, entry in zip(leaf.shape, entries):
+                    if entry is None:
+                        continue
+                    n = 1
+                    for a in (entry if isinstance(entry, tuple) else (entry,)):
+                        n *= mesh.shape[a]
+                    if dim % n:
+                        problems.append((name, tag, str(path),
+                                         f"uneven {dim}%{n}"))
+        if cfg.supports_decode:
+            c_shape = S.cache_shape(cfg, 128, 1024)
+            cs = cache_specs(c_shape, ax, cfg)
+            for (path, sp), leaf in zip(
+                jax.tree_util.tree_flatten_with_path(cs)[0],
+                jax.tree.leaves(c_shape),
+            ):
+                try:
+                    NamedSharding(mesh, sp)
+                except Exception as e:
+                    problems.append((name, "cache", str(path), str(e)[:80]))
+print(json.dumps(problems))
+"""
+
+
+def test_all_arch_specs_valid_on_both_meshes():
+    env = {**os.environ, "PYTHONPATH": "src"}
+    proc = subprocess.run([sys.executable, "-c", CHECKER],
+                          capture_output=True, text=True, timeout=600, env=env)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    import json
+
+    problems = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert problems == [], problems[:20]

@@ -1,0 +1,115 @@
+"""Tests for tail diagnostics (Hill/emplot), KS test, and the profiling layer."""
+
+import numpy as np
+import pytest
+
+from repro.core import bucketize, hill_estimator, ks_2samp, pearson, tail_report
+from repro.profiling import (
+    PhaseTimer,
+    RecordProfiler,
+    run_contended_job,
+    simulate_job,
+    simulate_records,
+)
+
+
+class TestTail:
+    def test_hill_recovers_pareto_alpha(self):
+        rng = np.random.default_rng(0)
+        for alpha in (1.3, 2.0):
+            x = rng.pareto(alpha, 300_000) + 1.0
+            est = float(hill_estimator(x, 30_000))
+            assert abs(est - alpha) / alpha < 0.1, (alpha, est)
+
+    def test_paper_alpha_band(self):
+        """Paper §5.3: read-map record times have alpha ~ 1.3 (heavy)."""
+        rng = np.random.default_rng(1)
+        x = rng.pareto(1.3, 200_000) + 1.0
+        rep = tail_report(x)
+        assert rep.heavy
+        assert 1.1 < rep.alpha < 1.5
+        # emplot linear with slope ~ -alpha
+        assert abs(-rep.emplot_slope - rep.alpha) < 0.3
+
+    def test_light_tail_not_heavy(self):
+        rng = np.random.default_rng(2)
+        x = np.abs(rng.normal(0, 1, 100_000)) + 1.0
+        rep = tail_report(x)
+        assert rep.alpha > 2.0
+
+
+class TestStats:
+    def test_ks_same_population(self):
+        rng = np.random.default_rng(3)
+        a, b = rng.pareto(1.3, 800), rng.pareto(1.3, 800)
+        assert ks_2samp(a, b).pvalue > 0.05  # no evidence against same pop.
+
+    def test_ks_different_population(self):
+        rng = np.random.default_rng(4)
+        a, b = rng.normal(0, 1, 800), rng.normal(1.0, 1, 800)
+        assert ks_2samp(a, b).pvalue < 1e-6
+
+    def test_pearson(self):
+        x = np.arange(100.0)
+        assert pearson(x, 3 * x + 1) == pytest.approx(1.0, abs=1e-5)
+        assert pearson(x, -x) == pytest.approx(-1.0, abs=1e-5)
+
+    def test_bucketize_preserves_total(self):
+        rng = np.random.default_rng(5)
+        x = rng.pareto(1.3, 12_345)
+        b = np.asarray(bucketize(x, 1000))
+        assert b.shape == (1000,)
+        np.testing.assert_allclose(b.sum(), x.sum(), rtol=1e-5)
+
+
+class TestProfiler:
+    def test_record_and_unit_grouping(self):
+        prof = RecordProfiler(unit=5)
+        for _ in range(23):
+            with prof.record():
+                pass
+        assert prof.num_records == 23
+        assert prof.unit_times().shape == (4,)  # 20 records -> 4 units of 5
+        assert prof.total() >= 0
+
+    def test_wrap(self):
+        prof = RecordProfiler(unit=1)
+        f = prof.wrap(lambda x: x + 1)
+        assert f(1) == 2
+        assert prof.num_records == 1
+
+    def test_phase_timer(self):
+        pt = PhaseTimer()
+        with pt.phase("spill"):
+            pass
+        with pt.phase("read-map"):
+            pass
+        assert set(pt.names()) == {"spill", "read-map"}
+        assert pt.times("spill").shape == (1,)
+
+
+class TestSimulator:
+    def test_decomposition_consistent(self):
+        p = simulate_records(10_000, seed=0)
+        np.testing.assert_allclose(p.times, p.ideal + p.overhead)
+        assert p.true_vet >= 1.0
+
+    def test_job_utilization_scales_overhead_only(self):
+        lo = simulate_job(3, 5000, utilization_factor=1.0, seed=1)
+        hi = simulate_job(3, 5000, utilization_factor=6.0, seed=1)
+        assert np.mean([p.true_oc for p in hi]) > np.mean([p.true_oc for p in lo])
+        np.testing.assert_allclose(
+            np.mean([p.true_ei for p in hi]),
+            np.mean([p.true_ei for p in lo]),
+            rtol=0.05,
+        )
+
+
+class TestContention:
+    def test_oversubscription_increases_pr(self):
+        """2 workers on 1 core: wall-per-record must grow vs 1 worker."""
+        t1 = run_contended_job(1, 120, unit=5)
+        t2 = run_contended_job(2, 120, unit=5)
+        pr1 = np.mean([t.sum() for t in t1])
+        pr2 = np.mean([t.sum() for t in t2])
+        assert pr2 > pr1 * 1.3
