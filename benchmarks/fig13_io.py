@@ -9,9 +9,7 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from repro.core import vet_job
+from repro.engine import default_engine
 from repro.profiling import run_contended_job
 
 from .common import emit, save_json
@@ -32,12 +30,13 @@ def run(records: int = 300):
 
     fast = run_contended_job(2, records, unit=5)
     slow = run_contended_job(2, records, unit=5, work=slow_work)
-    vf, vs = vet_job(fast, buckets=64), vet_job(slow, buckets=64)
+    engine = default_engine("jax")
+    vf, vs = engine.vet_many(fast), engine.vet_many(slow)
     emit("fig13/fast_vs_slow", 0.0,
-         f"vet_fast={float(vf.vet_job):.2f};vet_slow={float(vs.vet_job):.2f};"
-         f"ei_fast={float(vf.ei_mean):.4f}s;ei_slow={float(vs.ei_mean):.4f}s")
+         f"vet_fast={vf.vet_job:.2f};vet_slow={vs.vet_job:.2f};"
+         f"ei_fast={vf.ei.mean():.4f}s;ei_slow={vs.ei.mean():.4f}s")
     save_json("fig13_io", {
-        "vet_fast": float(vf.vet_job), "vet_slow": float(vs.vet_job),
-        "ei_fast": float(vf.ei_mean), "ei_slow": float(vs.ei_mean),
+        "vet_fast": vf.vet_job, "vet_slow": vs.vet_job,
+        "ei_fast": float(vf.ei.mean()), "ei_slow": float(vs.ei.mean()),
     })
     return vf, vs

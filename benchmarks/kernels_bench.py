@@ -30,6 +30,12 @@ def run():
     emit("kernels/changepoint_64k", t_k * 1e6, f"ref_us={t_r*1e6:.1f}")
     out["changepoint"] = {"kernel_us": t_k * 1e6, "ref_us": t_r * 1e6}
 
+    # vet engine: batched numpy/jax/pallas backend comparison (small shape
+    # here; the full 64x512 sweep is the standalone vet_engine suite)
+    from .vet_engine import bench_backends
+
+    out["vet_engine"] = bench_backends(workers=16, window=256, iters=3)
+
     # flash attention 512 x 8h x 64d
     ks = jax.random.split(KEY, 3)
     q = jax.random.normal(ks[0], (1, 512, 8, 64), jnp.float32)

@@ -23,6 +23,7 @@ SUITES = [
     ("fig14_correlation", "Paper Fig 14: vet vs task-time correlation"),
     ("roofline", "Framework: roofline table from dry-run"),
     ("kernels_bench", "Framework: Pallas kernel micro-benchmarks"),
+    ("vet_engine", "Framework: VetEngine backend comparison (numpy/jax/pallas)"),
 ]
 
 
@@ -30,6 +31,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="run a single suite")
     args = ap.parse_args()
+    if args.only and args.only not in {name for name, _ in SUITES}:
+        ap.error(f"unknown suite {args.only!r}; choose from "
+                 f"{', '.join(name for name, _ in SUITES)}")
 
     print("name,us_per_call,derived")
     failures = []

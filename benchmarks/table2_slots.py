@@ -8,25 +8,22 @@ vet 2.4->7.2 for slots 1->4).
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import vet_job
+from repro.engine import default_engine
 from repro.profiling import run_contended_job
 
 from .common import emit, save_json
 
 
 def run(records_per_task: int = 400, unit: int = 5):
+    engine = default_engine("jax")
     table = {}
     for w in (1, 2, 3, 4):
         tasks = run_contended_job(w, records_per_task, unit=unit)
-        jr = vet_job(tasks, buckets=64)
-        prs = np.asarray([float(r.pr) for r in jr.tasks])
-        eis = np.asarray([float(r.ei) for r in jr.tasks])
+        jr = engine.vet_many(tasks)  # all tasks in one batched call
         table[w] = {
-            "pr_mean": float(prs.mean()), "pr_std": float(prs.std()),
-            "ei_mean": float(eis.mean()), "ei_std": float(eis.std()),
-            "vet_job": float(jr.vet_job),
+            "pr_mean": float(jr.pr.mean()), "pr_std": float(jr.pr.std()),
+            "ei_mean": float(jr.ei.mean()), "ei_std": float(jr.ei.std()),
+            "vet_job": jr.vet_job,
         }
         emit(
             f"table2/slots={w}",

@@ -1,0 +1,63 @@
+"""VetEngine backend comparison: numpy scalar loop vs jit+vmap jax vs Pallas.
+
+Vets a (workers, window) batch of simulator ground-truth profiles through all
+three backends, reports µs/call and cross-backend agreement against the numpy
+oracle.  The headline number is the batched speedup: the jax/pallas backends
+vet the whole worker fleet in one compiled call where the numpy reference
+pays one scalar ``vet_task`` dispatch per worker.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.engine import BACKENDS, VetEngine
+
+from .common import emit, save_json, time_fn
+
+
+def make_batch(workers: int, window: int, seed: int = 0) -> np.ndarray:
+    from repro.profiling import simulate_records
+
+    return np.stack(
+        [simulate_records(window, seed=seed + i).times for i in range(workers)]
+    )
+
+
+def bench_backends(workers: int = 64, window: int = 512, iters: int = 5) -> dict:
+    """Time every backend on the same batch; return the comparison payload."""
+    m = make_batch(workers, window)
+    out = {"workers": workers, "window": window}
+    oracle = None
+    for backend in BACKENDS:
+        eng = VetEngine(backend, buckets=64)
+        res = eng.vet_batch(m)  # warmup / compile
+        t = time_fn(lambda: eng.vet_batch(m), warmup=1,
+                    iters=max(2, iters if backend != "numpy" else 2))
+        stats = {"us_per_call": t * 1e6, "vet_job": res.vet_job}
+        if oracle is None:
+            oracle = res
+        else:
+            stats["max_rel_ei_vs_numpy"] = float(
+                np.max(np.abs(res.ei - oracle.ei) / oracle.ei)
+            )
+            stats["t_mismatches_vs_numpy"] = int(np.sum(res.t != oracle.t))
+        out[backend] = stats
+        emit(
+            f"vet_engine/{backend}_{workers}x{window}",
+            t * 1e6,
+            f"vet_job={res.vet_job:.3f}"
+            + (f";ei_rel={stats['max_rel_ei_vs_numpy']:.1e}"
+               if "max_rel_ei_vs_numpy" in stats else ";oracle"),
+        )
+    speedup = out["numpy"]["us_per_call"] / out["jax"]["us_per_call"]
+    out["jax_speedup_vs_numpy"] = speedup
+    emit(f"vet_engine/summary_{workers}x{window}", 0.0,
+         f"jax_speedup={speedup:.1f}x")
+    return out
+
+
+def run():
+    out = bench_backends(workers=64, window=512)
+    save_json("vet_engine", out)
+    return out

@@ -1,0 +1,36 @@
+#!/usr/bin/env bash
+# Tier-1 CI: install test extras, run the full pytest suite, then a fast
+# VetEngine smoke benchmark (numpy/jax/pallas backend agreement + timing).
+#
+# Usage: scripts/ci.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# Test extras: hypothesis powers the property suite; without it those tests
+# skip (importorskip), so an offline container still runs tier-1 green.
+if ! python -c "import hypothesis" >/dev/null 2>&1; then
+  echo "[ci] installing test extras (hypothesis)"
+  python -m pip install --quiet hypothesis \
+    || echo "[ci] WARNING: hypothesis unavailable (offline?); property tests will skip"
+fi
+
+# Full run (no -x) so the report covers every module, and the engine smoke
+# below still executes when a test fails; exit status reflects the tests.
+echo "[ci] tier-1: pytest"
+status=0
+python -m pytest -q "$@" || status=$?
+
+echo "[ci] smoke: VetEngine backend benchmark"
+smoke_status=0
+python -m benchmarks.run --only vet_engine || smoke_status=$?
+
+if [ "$status" -ne 0 ]; then
+  echo "[ci] FAIL: pytest exited $status"
+  exit "$status"
+fi
+if [ "$smoke_status" -ne 0 ]; then
+  echo "[ci] FAIL: vet_engine smoke benchmark exited $smoke_status"
+  exit "$smoke_status"
+fi
+echo "[ci] OK"

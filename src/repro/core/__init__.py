@@ -13,7 +13,7 @@ from .changepoint import (
 from .extrapolate import ghat_curve, local_slope
 from .stats import KSResult, bucketize, ks_2samp, pearson
 from .tail import TailReport, emplot, hill_estimator, hill_plot, tail_report
-from .vet import VetJobResult, VetResult, ei_oc, vet_job, vet_task
+from .vet import VetJobResult, VetResult, ei_oc, vet_job, vet_pipeline, vet_task
 
 __all__ = [
     "OnlineVet",
@@ -36,5 +36,6 @@ __all__ = [
     "VetResult",
     "ei_oc",
     "vet_job",
+    "vet_pipeline",
     "vet_task",
 ]

@@ -6,19 +6,19 @@ recent records and re-estimates (EI, OC, vet) incrementally, with exponential
 forgetting across windows so regime changes (a straggler appearing, input
 storage degrading) surface within one window.
 
-Properties kept from the batch estimator: scale-equivariance, EI+OC == PR
-per window, vet >= 1 on well-formed profiles.
+Estimation is delegated to a ``repro.engine.VetEngine`` — this class is only
+the windowing/EMA wrapper around it.  Properties kept from the batch
+estimator: scale-equivariance, EI+OC == PR per window, vet >= 1 on
+well-formed profiles.
 """
 
 from __future__ import annotations
 
-from typing import Deque, NamedTuple, Optional
+from typing import Deque, List, NamedTuple, Optional
 
 import collections
 
 import numpy as np
-
-from .vet import vet_task
 
 __all__ = ["OnlineVet", "OnlineVetSnapshot"]
 
@@ -37,35 +37,51 @@ class OnlineVet:
     feed(times) appends record times; every ``window`` records a fresh batch
     estimate runs on the newest window and folds into an EMA.  O(window) memory
     regardless of stream length.
+
+    ``engine`` is the backing ``VetEngine``; when omitted, a shared default
+    (jax backend, ``buckets`` as given) is used.  With an explicit engine its
+    own bucketing configuration wins over ``buckets``.
     """
 
     def __init__(self, window: int = 512, alpha: float = 0.3,
-                 buckets: Optional[int] = 64):
+                 buckets: Optional[int] = 64, engine=None):
         if window < 64:
             raise ValueError("window must be >= 64")
         self.window = window
         self.alpha = alpha
         self.buckets = buckets
+        if engine is None:
+            from ..engine import default_engine  # deferred: engine -> core.vet
+
+            engine = default_engine("jax", buckets=buckets)
+        self.engine = engine
         self._buf: Deque[float] = collections.deque(maxlen=window)
         self._since_update = 0
         self._smoothed: Optional[float] = None
         self._last: Optional[OnlineVetSnapshot] = None
 
-    def feed(self, times) -> Optional[OnlineVetSnapshot]:
-        """Add record times; returns a new snapshot when a window completes."""
+    def feed(self, times) -> List[OnlineVetSnapshot]:
+        """Add record times; returns every snapshot emitted by this call.
+
+        A single call can span several window completions (e.g. a large chunk
+        of buffered records arriving at once) — each completed window yields
+        its own snapshot, in stream order.  An empty list means no window
+        completed.  (Earlier versions returned only the last snapshot,
+        silently dropping the intermediate ones.)
+        """
         arr = np.atleast_1d(np.asarray(times, dtype=np.float64))
-        out = None
+        out: List[OnlineVetSnapshot] = []
         for t in arr:
             self._buf.append(float(t))
             self._since_update += 1
             if len(self._buf) >= self.window and self._since_update >= self.window // 2:
-                out = self._estimate()
+                out.append(self._estimate())
                 self._since_update = 0
         return out
 
     def _estimate(self) -> OnlineVetSnapshot:
         window = np.asarray(self._buf)
-        r = vet_task(window, buckets=self.buckets)
+        r = self.engine.vet_one(window)
         vet = float(r.vet)
         self._smoothed = (vet if self._smoothed is None
                           else self.alpha * vet + (1 - self.alpha) * self._smoothed)

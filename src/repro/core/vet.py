@@ -37,7 +37,14 @@ import jax.numpy as jnp
 
 from .changepoint import estimate_changepoint
 
-__all__ = ["VetResult", "VetJobResult", "vet_task", "vet_job", "ei_oc"]
+__all__ = [
+    "VetResult",
+    "VetJobResult",
+    "vet_task",
+    "vet_job",
+    "vet_pipeline",
+    "ei_oc",
+]
 
 _TINY = 1e-12
 
@@ -74,9 +81,15 @@ class VetJobResult(NamedTuple):
         return jnp.std(jnp.stack([r.pr for r in self.tasks]))
 
 
-def _cut_and_slope(y: jax.Array, omega: int, buckets, cut_space: str):
+def _cut_and_slope(y: jax.Array, omega: int, buckets, cut_space: str,
+                   changepoint_fn=None):
     """Locate the change-point on (optionally bucketed, optionally logged)
-    sorted times; return (t_records, anchor_value, per-record slope)."""
+    sorted times; return (t_records, anchor_value, per-record slope).
+
+    ``changepoint_fn(z, omega=...) -> t`` swaps the SSE-scan implementation
+    (e.g. the Pallas kernel used by ``repro.engine``); default is the jnp
+    prefix-sum scan.
+    """
     n = y.shape[0]
     use_buckets = buckets is not None and n >= 4 * buckets
     if use_buckets:
@@ -86,7 +99,8 @@ def _cut_and_slope(y: jax.Array, omega: int, buckets, cut_space: str):
         per = 1
         curve = y
     z = jnp.log(jnp.maximum(curve, _TINY)) if cut_space == "log" else curve
-    tb = estimate_changepoint(z, omega=omega)  # 1-indexed on the curve
+    cp = estimate_changepoint if changepoint_fn is None else changepoint_fn
+    tb = cp(z, omega=omega)  # 1-indexed on the curve
     i = jnp.clip(tb - 1, 1, curve.shape[0] - 1)
     anchor = curve[i]
     slope = jnp.maximum(curve[i] - curve[i - 1], 0.0) / per
@@ -124,6 +138,32 @@ def ei_oc(y_sorted: jax.Array, t, anchor=None, slope=None):
     return ei, oc
 
 
+def vet_pipeline(
+    times: jax.Array,
+    omega: int = 3,
+    buckets: int | None = 1000,
+    cut_space: str = "log",
+    changepoint_fn=None,
+):
+    """The traceable single-profile pipeline: raw (unsorted) record times ->
+    ``(vet, ei, oc, pr, t)`` as 0-dim arrays.
+
+    This is the body of ``vet_task`` without the jit wrapper or the Python
+    result container, so ``jax.vmap`` can map it over a (workers, window)
+    matrix — the ``repro.engine`` batched backends compile exactly this
+    function, which keeps them numerically identical to the scalar oracle.
+    """
+    if cut_space not in ("raw", "log"):
+        raise ValueError(f"cut_space must be 'raw' or 'log', got {cut_space!r}")
+    x = jnp.asarray(times)
+    x = x.astype(jnp.promote_types(x.dtype, jnp.float32))
+    y = jnp.sort(x)
+    t, anchor, slope = _cut_and_slope(y, omega, buckets, cut_space, changepoint_fn)
+    ei, oc = ei_oc(y, t, anchor, slope)
+    pr = jnp.sum(y)
+    return pr / ei, ei, oc, pr, t
+
+
 @functools.partial(jax.jit, static_argnames=("omega", "buckets", "cut_space"))
 def vet_task(
     times: jax.Array,
@@ -136,15 +176,9 @@ def vet_task(
     Defaults are the framework estimator (bucketed log-cut). For the paper's
     literal estimator use ``buckets=None, cut_space="raw"``.
     """
-    if cut_space not in ("raw", "log"):
-        raise ValueError(f"cut_space must be 'raw' or 'log', got {cut_space!r}")
-    x = jnp.asarray(times)
-    x = x.astype(jnp.promote_types(x.dtype, jnp.float32))
-    y = jnp.sort(x)
-    t, anchor, slope = _cut_and_slope(y, omega, buckets, cut_space)
-    ei, oc = ei_oc(y, t, anchor, slope)
-    pr = jnp.sum(y)
-    return VetResult(vet=pr / ei, ei=ei, oc=oc, pr=pr, t=t, n=int(x.shape[0]))
+    vet, ei, oc, pr, t = vet_pipeline(times, omega, buckets, cut_space)
+    return VetResult(vet=vet, ei=ei, oc=oc, pr=pr, t=t,
+                     n=int(jnp.shape(times)[0]))
 
 
 def vet_job(

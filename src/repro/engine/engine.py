@@ -1,0 +1,211 @@
+"""VetEngine: one estimation API, three interchangeable backends.
+
+See the package docstring for the API -> paper mapping.  Implementation
+notes:
+
+- The ``jax`` and ``pallas`` backends compile ``jax.vmap`` of the *exact*
+  single-profile pipeline (``repro.core.vet.vet_pipeline``) — not a parallel
+  re-implementation — so cross-backend equivalence is structural, not
+  coincidental.  They differ only in which two-segment-SSE scan the
+  change-point step calls (jnp prefix sums vs the Pallas kernel).
+- Compiled batch functions are cached per engine instance; jit's own shape
+  cache handles varying (workers, window) shapes.
+- Results are returned as host NumPy arrays (``BatchVetResult``): the
+  consumers are control loops (schedulers, dashboards) that immediately
+  branch on the values.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.vet import VetResult, vet_pipeline, vet_task
+from ..kernels.changepoint.ops import auto_block, changepoint_pallas
+
+__all__ = ["BACKENDS", "BatchVetResult", "VetEngine", "default_engine"]
+
+BACKENDS = ("numpy", "jax", "pallas")
+
+
+class BatchVetResult(NamedTuple):
+    """Per-worker vet diagnostics for a batch of profiles (host arrays)."""
+
+    vet: np.ndarray  # (W,) PR / EI per worker
+    ei: np.ndarray  # (W,) estimated ideal cost (seconds)
+    oc: np.ndarray  # (W,) estimated overhead cost (seconds)
+    pr: np.ndarray  # (W,) profiled real cost == EI + OC
+    t: np.ndarray  # (W,) change-point (1-indexed record-rank prefix size)
+    n: np.ndarray  # (W,) records per profile
+
+    @property
+    def workers(self) -> int:
+        return int(self.vet.shape[0])
+
+    @property
+    def vet_job(self) -> float:
+        """vet_job = mean of per-task vet scores (paper §4.4)."""
+        return float(self.vet.mean())
+
+    def task(self, i: int) -> VetResult:
+        """The i-th worker's result in the scalar ``VetResult`` container."""
+        return VetResult(
+            vet=jnp.asarray(self.vet[i]),
+            ei=jnp.asarray(self.ei[i]),
+            oc=jnp.asarray(self.oc[i]),
+            pr=jnp.asarray(self.pr[i]),
+            t=jnp.asarray(self.t[i]),
+            n=int(self.n[i]),
+        )
+
+
+class VetEngine:
+    """Batched record-times -> change-point -> extrapolation -> (EI, OC, vet).
+
+    Parameters mirror ``vet_task``: ``omega`` (probing window), ``buckets``
+    (curve bucketing; auto-disabled when a profile has < 4*buckets records)
+    and ``cut_space`` ("log" framework default / "raw" paper-literal).
+    ``backend`` picks the execution path, see ``repro.engine`` docstring;
+    ``interpret`` keeps the Pallas kernel in interpret mode (CPU containers).
+    """
+
+    def __init__(
+        self,
+        backend: str = "jax",
+        *,
+        omega: int = 3,
+        buckets: Optional[int] = 1000,
+        cut_space: str = "log",
+        interpret: bool = True,
+    ):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+        if cut_space not in ("raw", "log"):
+            raise ValueError(f"cut_space must be 'raw' or 'log', got {cut_space!r}")
+        self.backend = backend
+        self.omega = omega
+        self.buckets = buckets
+        self.cut_space = cut_space
+        self.interpret = interpret
+        self._batch_fn = None  # compiled lazily on first vet_batch
+
+    def __repr__(self) -> str:
+        return (f"VetEngine(backend={self.backend!r}, omega={self.omega}, "
+                f"buckets={self.buckets}, cut_space={self.cut_space!r})")
+
+    # ------------------------------------------------------------- backends
+    def _pallas_changepoint(self, z, omega: int = 3):
+        # z's (static) trace-time shape picks the kernel block size.
+        block = auto_block(z.shape[0])
+        return changepoint_pallas(z, omega=omega, block=block,
+                                  interpret=self.interpret)
+
+    def _make_batch_fn(self):
+        cp_fn = self._pallas_changepoint if self.backend == "pallas" else None
+        single = functools.partial(
+            vet_pipeline,
+            omega=self.omega,
+            buckets=self.buckets,
+            cut_space=self.cut_space,
+            changepoint_fn=cp_fn,
+        )
+        return jax.jit(jax.vmap(single))
+
+    def _numpy_batch(self, matrix: np.ndarray) -> BatchVetResult:
+        # The pre-engine call-site path: scalar vet_task per worker (oracle).
+        results = [
+            vet_task(row, omega=self.omega, buckets=self.buckets,
+                     cut_space=self.cut_space)
+            for row in matrix
+        ]
+        return BatchVetResult(
+            vet=np.asarray([float(r.vet) for r in results]),
+            ei=np.asarray([float(r.ei) for r in results]),
+            oc=np.asarray([float(r.oc) for r in results]),
+            pr=np.asarray([float(r.pr) for r in results]),
+            t=np.asarray([int(r.t) for r in results], dtype=np.int32),
+            n=np.asarray([r.n for r in results], dtype=np.int64),
+        )
+
+    # ------------------------------------------------------------------ API
+    def vet_batch(self, times_matrix) -> BatchVetResult:
+        """Vet a (workers, window) matrix of raw record times in one call.
+
+        Rows are independent profiles; a 1-D input is treated as one worker.
+        For the ``jax``/``pallas`` backends the whole batch is a single
+        compiled call; ``numpy`` loops the scalar reference per row.
+        """
+        m = np.atleast_2d(np.asarray(times_matrix, dtype=np.float64))
+        if m.ndim != 2:
+            raise ValueError(f"expected (workers, window) matrix, got {m.shape}")
+        if self.backend == "numpy":
+            return self._numpy_batch(m)
+        if self._batch_fn is None:
+            self._batch_fn = self._make_batch_fn()
+        vet, ei, oc, pr, t = self._batch_fn(m)
+        w = m.shape[0]
+        return BatchVetResult(
+            vet=np.asarray(vet, dtype=np.float64),
+            ei=np.asarray(ei, dtype=np.float64),
+            oc=np.asarray(oc, dtype=np.float64),
+            pr=np.asarray(pr, dtype=np.float64),
+            t=np.asarray(t, dtype=np.int32),
+            n=np.full(w, m.shape[1], dtype=np.int64),
+        )
+
+    def vet_one(self, times) -> VetResult:
+        """Scalar convenience wrapper: one profile through the batched path."""
+        return self.vet_batch(np.atleast_1d(np.asarray(times))[None, :]).task(0)
+
+    def vet_many(self, profiles: Sequence) -> BatchVetResult:
+        """Vet ragged profiles (different record counts per worker).
+
+        Equal-length profiles are grouped and vetted in one batched call per
+        distinct length; results come back in input order.  This is the entry
+        point for controllers whose per-worker buffers fill unevenly.
+        """
+        arrs = [np.atleast_1d(np.asarray(p, dtype=np.float64)).ravel()
+                for p in profiles]
+        if not arrs:
+            raise ValueError("vet_many needs at least one profile")
+        w = len(arrs)
+        vet = np.empty(w)
+        ei = np.empty(w)
+        oc = np.empty(w)
+        pr = np.empty(w)
+        t = np.empty(w, dtype=np.int32)
+        n = np.empty(w, dtype=np.int64)
+        groups: dict = {}
+        for i, a in enumerate(arrs):
+            groups.setdefault(a.size, []).append(i)
+        for size, idxs in groups.items():
+            br = self.vet_batch(np.stack([arrs[i] for i in idxs]))
+            for j, i in enumerate(idxs):
+                vet[i], ei[i], oc[i] = br.vet[j], br.ei[j], br.oc[j]
+                pr[i], t[i], n[i] = br.pr[j], br.t[j], br.n[j]
+        return BatchVetResult(vet=vet, ei=ei, oc=oc, pr=pr, t=t, n=n)
+
+    def vet_job(self, profiles: Sequence) -> float:
+        """Mean per-task vet over ragged profiles (paper §4.4)."""
+        return self.vet_many(profiles).vet_job
+
+
+@functools.lru_cache(maxsize=None)
+def _default_engine_cached(backend: str, omega: int, buckets, cut_space: str):
+    return VetEngine(backend, omega=omega, buckets=buckets, cut_space=cut_space)
+
+
+def default_engine(backend: str = "jax", *, omega: int = 3,
+                   buckets: Optional[int] = 64,
+                   cut_space: str = "log") -> VetEngine:
+    """Shared process-wide engine (so call sites reuse compiled batch fns).
+
+    Control-loop consumers default to ``buckets=64``: their windows are a
+    few hundred records, where the full-resolution scan is unnecessary and
+    64 buckets matches the pre-engine call-site convention.
+    """
+    return _default_engine_cached(backend, omega, buckets, cut_space)

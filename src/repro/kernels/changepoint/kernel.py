@@ -10,7 +10,8 @@ candidates per grid step from three prefix-sum arrays resident in VMEM:
   out   : sse block (BLOCK,)
 
 Closed forms: Sx(k) = k(k+1)/2, Sxx(k) = k(k+1)(2k+1)/6 — no extra arrays.
-All math f32 on centered-y inputs (ops.py pre-centers y for stability).
+All math f32, on the same uncentered prefix sums the jnp reference scan uses
+(see ops.py for why reference-consistency beats absolute conditioning here).
 """
 
 from __future__ import annotations

@@ -1,10 +1,16 @@
 """Jit'd wrapper: sorted record times -> change-point via the Pallas SSE scan.
 
-Numerical notes: y is centered (y - mean) before the prefix sums so the f32
-segment-SSE cancellations stay well-conditioned (centering shifts both
-segments' intercepts, leaving every SSE unchanged).  Prefix sums are computed
-in f64-equivalent fashion via jnp.cumsum on f32 — adequate for the profile
-sizes the estimator runs on (<= a few million records per task).
+Numerical notes: the prefix sums are computed *exactly* as the jnp reference
+scan computes them (same jnp.cumsum on uncentered f32 inputs, same closed
+forms in the kernel), so the kernel's SSE landscape tracks the reference to
+~ulp level.  That consistency is deliberate: on near-flat landscapes (heavy
+tails in raw cut space, bucketed log curves) the argmin sits on 1e-4-relative
+near-ties, and an implementation that disagrees with the reference by more
+than an ulp flips the chosen cut even though both answers are "valid" — the
+cross-backend equivalence the VetEngine relies on would be lost.  (An earlier
+version centered y for better absolute f32 conditioning; that bought accuracy
+vs float64 but cost agreement with the uncentered reference, which is the
+contract that matters here.)
 """
 
 from __future__ import annotations
@@ -16,13 +22,20 @@ import jax.numpy as jnp
 
 from .kernel import DEFAULT_BLOCK, sse_scan
 
-__all__ = ["changepoint_pallas", "two_segment_sse_pallas"]
+__all__ = ["changepoint_pallas", "two_segment_sse_pallas", "auto_block"]
+
+
+def auto_block(n: int) -> int:
+    """Smallest 128-multiple block covering n, capped at DEFAULT_BLOCK.
+
+    Short inputs (e.g. the engine's bucketed curves, B ~ 64-1000) would
+    otherwise pad 16x out to the default 1024-wide block."""
+    return min(DEFAULT_BLOCK, max(128, ((n + 127) // 128) * 128))
 
 
 def _prefix_inputs(y_sorted, block):
     y = jnp.asarray(y_sorted, jnp.float32)
     n = y.shape[0]
-    y = y - jnp.mean(y)  # centering: SSEs are translation-invariant
     idx = jnp.arange(1, n + 1, dtype=jnp.float32)
     cy = jnp.cumsum(y)
     cyy = jnp.cumsum(y * y)

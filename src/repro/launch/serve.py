@@ -2,8 +2,10 @@
 
 prefill(prompt batch) -> decode loop; every decode step is a profiled record
 (the paper's reduce-write analogue), so a serving deployment gets the same
-optimality dashboard as training: vet_task per serving worker, EI as the
-estimated ideal per-token latency.
+optimality dashboard as training: vet per serving worker (estimated by the
+shared ``VetEngine``), EI as the estimated ideal per-token latency, and
+per-window snapshots (one batched engine call) showing vet drift over the
+generation.
 """
 
 from __future__ import annotations
@@ -17,11 +19,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config
-from ..core import vet_task
+from ..engine import BatchVetResult, VetEngine, default_engine
 from ..models import decode_step, init_cache, init_params, prefill
 from ..profiling import RecordProfiler
 
 __all__ = ["ServeResult", "serve"]
+
+_SNAPSHOT_WINDOW = 32  # unit-records per windowed vet snapshot
 
 
 @dataclasses.dataclass
@@ -31,6 +35,9 @@ class ServeResult:
     ei: Optional[float]
     pr: Optional[float]
     tokens_per_s: float
+    # Windowed per-worker snapshots from one batched engine call (None when
+    # the run produced fewer than two full windows).
+    windows: Optional[BatchVetResult] = None
 
 
 def serve(
@@ -45,6 +52,7 @@ def serve(
     record_unit: int = 5,
     greedy: bool = True,
     verbose: bool = True,
+    engine: Optional[VetEngine] = None,
 ) -> ServeResult:
     cfg = get_config(cfg_or_name) if isinstance(cfg_or_name, str) else cfg_or_name
     if not cfg.supports_decode:
@@ -77,16 +85,30 @@ def serve(
     gen = np.asarray(jnp.concatenate(out, axis=1))
 
     vet = ei = pr = None
+    windows = None
     times = prof.unit_times()
     if times.size >= 16:
-        r = vet_task(times, buckets=min(64, times.size // 4))
+        if engine is None:
+            # pre-engine call-site convention: bucket count adapts to the
+            # profile size so short runs keep the bucketed estimator
+            engine = default_engine("jax", buckets=min(64, times.size // 4))
+        r = engine.vet_one(times)
         vet, ei, pr = float(r.vet), float(r.ei), float(r.pr)
         if verbose:
             print(f"[serve] vet={vet:.3f} EI={ei:.4f}s PR={pr:.4f}s")
+        k = times.size // _SNAPSHOT_WINDOW
+        if k >= 2:
+            windows = engine.vet_batch(
+                times[: k * _SNAPSHOT_WINDOW].reshape(k, _SNAPSHOT_WINDOW)
+            )
+            if verbose:
+                ws = " ".join(f"{v:.2f}" for v in windows.vet)
+                print(f"[serve] window vets: {ws}")
     tps = batch * gen_len / wall
     if verbose:
         print(f"[serve] {batch}x{gen_len} tokens in {wall:.2f}s = {tps:.1f} tok/s")
-    return ServeResult(tokens=gen, vet=vet, ei=ei, pr=pr, tokens_per_s=tps)
+    return ServeResult(tokens=gen, vet=vet, ei=ei, pr=pr, tokens_per_s=tps,
+                       windows=windows)
 
 
 def main():

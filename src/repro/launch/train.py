@@ -7,7 +7,9 @@ Loop: data fetch -> jitted train_step -> (periodic) async checkpoint, with
     deterministic data stream from the step counter;
   * simulated failure injection (``fail_at_step``) for the recovery tests;
   * a VetController consuming the live profile (paper §5.5) whose decision is
-    surfaced in the metrics (host-level concurrency is a deploy-side knob).
+    surfaced in the metrics (host-level concurrency is a deploy-side knob);
+  * all vet estimation routed through one shared ``VetEngine`` (``engine=``),
+    so the report and the controller use the same batched estimator.
 
 CLI:  python -m repro.launch.train --arch mamba2-130m --steps 100 ...
 """
@@ -25,8 +27,8 @@ import numpy as np
 
 from ..checkpoint.checkpoint import AsyncCheckpointer, latest_step, restore
 from ..configs import get_config
-from ..core import vet_task
 from ..data.pipeline import SyntheticTokenPipeline
+from ..engine import VetEngine, default_engine
 from ..models import init_params
 from ..optim.adamw import AdamWConfig, init_opt_state
 from ..profiling import PhaseTimer, RecordProfiler
@@ -46,6 +48,8 @@ class TrainResult:
     phase_totals: Dict[str, float]
     resumed_from: Optional[int]
     controller_decision: Optional[Any]
+    # per-worker vet snapshots from the controller's batched engine call
+    worker_vets: Optional[Dict[int, float]] = None
 
 
 class SimulatedFailure(RuntimeError):
@@ -71,6 +75,7 @@ def train(
     q_chunk: int = 1024,
     log_every: int = 10,
     verbose: bool = True,
+    engine: Optional[VetEngine] = None,
 ) -> TrainResult:
     cfg = get_config(cfg_or_name) if isinstance(cfg_or_name, str) else cfg_or_name
 
@@ -105,7 +110,13 @@ def train(
 
     prof = RecordProfiler(unit=record_unit)
     phases = PhaseTimer()
-    controller = VetController(n_workers=max(n_micro, 1))
+    # With no explicit engine, the controller gets the shared fixed-bucket
+    # default; the end-of-run report below adapts buckets to the profile
+    # size (the pre-engine convention for short runs).
+    controller = VetController(
+        n_workers=max(n_micro, 1),
+        engine=engine if engine is not None else default_engine("jax"),
+    )
     losses = []
 
     step = start_step
@@ -141,19 +152,23 @@ def train(
 
     vet = ei = pr = None
     decision = None
+    worker_vets = None
     times = prof.unit_times()
     if times.size >= 16:
-        r = vet_task(times, buckets=min(64, times.size // 4))
+        if engine is None:
+            engine = default_engine("jax", buckets=min(64, times.size // 4))
+        r = engine.vet_one(times)
         vet, ei, pr = float(r.vet), float(r.ei), float(r.pr)
         controller.feed(0, times)
         decision = controller.decide()
+        worker_vets = dict(decision.worker_vets) or None
         if verbose:
             print(f"[train] vet={vet:.3f} EI={ei:.3f}s PR={pr:.3f}s "
                   f"controller: {decision.reason}")
     return TrainResult(
         final_step=step, losses=losses, vet=vet, ei=ei, pr=pr,
         phase_totals=phases.totals(), resumed_from=resumed_from,
-        controller_decision=decision,
+        controller_decision=decision, worker_vets=worker_vets,
     )
 
 

@@ -16,14 +16,12 @@ from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from ..core import vet_task
 from ..data.pipeline import SyntheticTokenPipeline
+from ..engine import VetEngine, default_engine
 from ..models import init_params
 from ..optim.adamw import AdamWConfig, init_opt_state
 from ..profiling import RecordProfiler
-from .straggler import VetController
 
 __all__ = ["TuneCandidate", "tune"]
 
@@ -46,6 +44,7 @@ def tune(
     q_chunk_options: Sequence[int] = (32, 64),
     seed: int = 0,
     verbose: bool = True,
+    engine: Optional[VetEngine] = None,
 ) -> List[TuneCandidate]:
     """Measure every knob combination; return candidates sorted by step time,
     each annotated with its vet score (the optimality audit)."""
@@ -71,7 +70,9 @@ def tune(
                 params, opt, m = step_fn(params, opt, b)
                 jax.block_until_ready(m["loss"])
         times = prof.record_times()[2:]  # drop compile steps
-        r = vet_task(times, buckets=min(64, max(8, times.size // 4)))
+        eng = engine if engine is not None else default_engine(
+            "jax", buckets=min(64, max(8, times.size // 4)))
+        r = eng.vet_one(times)
         cand = TuneCandidate(
             knobs={"n_micro": n_micro, "q_chunk": q_chunk},
             mean_step_s=float(times.mean()),

@@ -9,6 +9,10 @@ per-worker record profiles and emits concurrency / straggler decisions:
     count (or microbatch concurrency) until vet approaches the knee.
   * one worker's vet an outlier   -> straggler: flag for re-shard/eviction
     (KS test against the pooled population confirms it is not noise).
+
+Estimation routes through a ``repro.engine.VetEngine``: ``decide()`` vets
+all workers in one batched call (grouped by profile length when buffers fill
+unevenly) instead of a per-worker Python loop.
 """
 
 from __future__ import annotations
@@ -18,7 +22,8 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from ..core import ks_2samp, vet_job, vet_task
+from ..core import ks_2samp
+from ..engine import VetEngine, default_engine
 
 __all__ = ["SchedulerDecision", "VetController"]
 
@@ -29,6 +34,7 @@ class SchedulerDecision:
     stragglers: List[int] = field(default_factory=list)
     vet_job: float = 1.0
     reason: str = ""
+    worker_vets: Dict[int, float] = field(default_factory=dict)
 
 
 class VetController:
@@ -50,6 +56,7 @@ class VetController:
         vet_low: float = 1.1,  # near-ideal => can grow
         straggler_pvalue: float = 0.01,
         straggler_ratio: float = 1.5,
+        engine: Optional[VetEngine] = None,
     ):
         self.n_workers = n_workers
         self.min_workers = min_workers
@@ -59,6 +66,7 @@ class VetController:
         self.vet_low = vet_low
         self.straggler_pvalue = straggler_pvalue
         self.straggler_ratio = straggler_ratio
+        self.engine = engine if engine is not None else default_engine("jax")
         self._buffers: Dict[int, List[float]] = {i: [] for i in range(n_workers)}
 
     def feed(self, worker_id: int, record_times: Sequence[float]) -> None:
@@ -71,15 +79,17 @@ class VetController:
         return all(len(b) >= 32 for b in self._buffers.values() if b is not None)
 
     def decide(self) -> SchedulerDecision:
-        profiles = {i: np.asarray(b) for i, b in self._buffers.items() if len(b) >= 32}
-        if not profiles:
+        ids = [i for i, b in self._buffers.items() if len(b) >= 32]
+        if not ids:
             return SchedulerDecision(self.n_workers, reason="insufficient data")
+        profiles = {i: np.asarray(self._buffers[i]) for i in ids}
 
-        jr = vet_job(list(profiles.values()), buckets=64)
-        vj = float(jr.vet_job)
+        # One batched engine call vets every worker (grouped by length).
+        batch = self.engine.vet_many([profiles[i] for i in ids])
+        vj = batch.vet_job
+        vets = {i: float(v) for i, v in zip(ids, batch.vet)}
 
         # --- straggler detection: per-worker vet outliers confirmed by KS ---
-        vets = {i: float(r.vet) for i, r in zip(profiles, jr.tasks)}
         med = float(np.median(list(vets.values())))
         stragglers = []
         pooled = np.concatenate(list(profiles.values()))
@@ -104,7 +114,8 @@ class VetController:
             reason = f"vet_job {vj:.2f} < {self.vet_low}: headroom, grow"
 
         return SchedulerDecision(
-            target_workers=target, stragglers=stragglers, vet_job=vj, reason=reason
+            target_workers=target, stragglers=stragglers, vet_job=vj,
+            reason=reason, worker_vets=vets,
         )
 
     def apply(self, decision: SchedulerDecision) -> None:

@@ -1,0 +1,74 @@
+"""Property-based (hypothesis) tests for the vet estimator.
+
+Split from ``test_core_vet.py`` so the deterministic suite always collects;
+this module is skipped wholesale when ``hypothesis`` is not installed
+(``scripts/ci.sh`` installs it as a test extra).
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import vet_task  # noqa: E402
+
+
+@st.composite
+def time_profiles(draw):
+    n = draw(st.integers(min_value=16, max_value=400))
+    base = draw(st.floats(min_value=1e-6, max_value=1.0))
+    vals = draw(
+        st.lists(
+            st.floats(min_value=0.0, max_value=100.0, allow_nan=False),
+            min_size=n, max_size=n,
+        )
+    )
+    return base + np.asarray(vals)
+
+
+@settings(max_examples=30, deadline=None)
+@given(time_profiles())
+def test_prop_conservation_and_positivity(times):
+    r = vet_task(times, buckets=64)
+    ei, oc, pr = float(r.ei), float(r.oc), float(r.pr)
+    assert ei > 0
+    np.testing.assert_allclose(ei + oc, pr, rtol=1e-4, atol=1e-6)
+    # EI never exceeds PR by more than fp slack: the ideal is a lower bound.
+    assert ei <= pr * (1 + 1e-5) + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(time_profiles(), st.integers(min_value=0, max_value=2**31 - 1))
+def test_prop_permutation_invariance(times, seed):
+    perm = np.random.default_rng(seed).permutation(times)
+    r1, r2 = vet_task(times, buckets=64), vet_task(perm, buckets=64)
+    np.testing.assert_allclose(float(r1.vet), float(r2.vet), rtol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(time_profiles(), st.floats(min_value=0.1, max_value=1000.0))
+def test_prop_scale_equivariance(times, c):
+    r1, r2 = vet_task(times, buckets=64), vet_task(c * times, buckets=64)
+    np.testing.assert_allclose(float(r2.vet), float(r1.vet), rtol=1e-3, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=128, max_value=1024),
+    st.floats(min_value=0.5, max_value=50.0),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_prop_suffix_overhead_never_decreases_vet(n, boost, seed):
+    """On profiles satisfying the estimator's premise (a continuous, near-flat
+    base population), adding pure overhead to the slowest 10% of records is
+    absorbed by OC: vet must not decrease (and PR must grow)."""
+    rng = np.random.default_rng(seed)
+    y = np.sort(1.0 + 0.1 * rng.random(n))  # continuous near-flat base
+    k = max(1, n // 10)
+    heavy = y.copy()
+    heavy[-k:] = heavy[-k:] + boost
+    r0, r1 = vet_task(y, buckets=64), vet_task(heavy, buckets=64)
+    assert float(r1.pr) > float(r0.pr)
+    assert float(r1.vet) >= float(r0.vet) * (1 - 5e-2)

@@ -51,6 +51,22 @@ class TestChangepointKernel:
         t = int(changepoint_pallas(jnp.asarray(y), omega=omega))
         assert omega <= t <= 1024 - omega
 
+    def test_vmapped_kernel_matches_per_row(self):
+        """The engine's batched pallas path is vmap over the single-row
+        kernel; a lifted batch must agree with per-row calls."""
+        rows = []
+        for i in range(6):
+            k = 150 + 10 * i
+            rows.append(np.sort(np.concatenate(
+                [RNG.normal(1, 0.02, k), 3 + RNG.pareto(1.5, 256 - k)]
+            )))
+        y = jnp.asarray(np.stack(rows))
+        fn = lambda r: changepoint_pallas(r, block=256)  # noqa: E731
+        t_batch = np.asarray(jax.vmap(fn)(y))
+        assert t_batch.shape == (6,)
+        for i in range(6):
+            assert t_batch[i] == int(fn(y[i]))
+
 
 # ------------------------------------------------------------ flash attention
 ATTN_SWEEP = [
