@@ -30,11 +30,14 @@ def run():
     emit("kernels/changepoint_64k", t_k * 1e6, f"ref_us={t_r*1e6:.1f}")
     out["changepoint"] = {"kernel_us": t_k * 1e6, "ref_us": t_r * 1e6}
 
-    # vet engine: batched numpy/jax/pallas backend comparison (small shape
-    # here; the full 64x512 sweep is the standalone vet_engine suite)
-    from .vet_engine import bench_backends
+    # vet engine: batched numpy/jax/pallas backend comparison (small shapes
+    # here; the full 64x512 / 64-window sweeps are the standalone vet_engine
+    # suite)
+    from .vet_engine import bench_backends, bench_windowed
 
     out["vet_engine"] = bench_backends(workers=16, window=256, iters=3)
+    out["vet_engine_windowed"] = bench_windowed(n_records=568, window=64,
+                                                stride=8, iters=3)
 
     # flash attention 512 x 8h x 64d
     ks = jax.random.split(KEY, 3)

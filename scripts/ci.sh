@@ -1,13 +1,15 @@
 #!/usr/bin/env bash
-# Tier-1 CI: install test extras, run the full pytest suite, then a fast
-# VetEngine smoke benchmark (numpy/jax/pallas backend agreement + timing).
+# Tier-1 CI: install test extras, run the windowed-vetting differential suite
+# explicitly, then the full pytest suite, then a fast VetEngine smoke
+# benchmark (batch + windowed sections: backend agreement, batched-vs-scalar
+# speedup, cached-tick cost).
 #
 # Usage: scripts/ci.sh [extra pytest args...]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-# Test extras: hypothesis powers the property suite; without it those tests
+# Test extras: hypothesis powers the property suites; without it those tests
 # skip (importorskip), so an offline container still runs tier-1 green.
 if ! python -c "import hypothesis" >/dev/null 2>&1; then
   echo "[ci] installing test extras (hypothesis)"
@@ -15,16 +17,36 @@ if ! python -c "import hypothesis" >/dev/null 2>&1; then
     || echo "[ci] WARNING: hypothesis unavailable (offline?); property tests will skip"
 fi
 
+# Windowed vetting first and explicitly (-x): these lock the batched
+# sliding/ragged path to the scalar oracle — if they break, the full-suite
+# report below is noise.
+echo "[ci] windowed vetting: differential + property + benchmark-smoke suites"
+windowed_status=0
+python -m pytest -q -x \
+  tests/test_vet_windows.py \
+  tests/test_vet_windows_properties.py \
+  tests/test_benchmarks_smoke.py \
+  || windowed_status=$?
+
 # Full run (no -x) so the report covers every module, and the engine smoke
 # below still executes when a test fails; exit status reflects the tests.
+# The windowed suites already ran above, so they are not run twice.
 echo "[ci] tier-1: pytest"
 status=0
-python -m pytest -q "$@" || status=$?
+python -m pytest -q \
+  --ignore=tests/test_vet_windows.py \
+  --ignore=tests/test_vet_windows_properties.py \
+  --ignore=tests/test_benchmarks_smoke.py \
+  "$@" || status=$?
 
-echo "[ci] smoke: VetEngine backend benchmark"
+echo "[ci] smoke: VetEngine backend benchmark (batch + windowed sections)"
 smoke_status=0
 python -m benchmarks.run --only vet_engine || smoke_status=$?
 
+if [ "$windowed_status" -ne 0 ]; then
+  echo "[ci] FAIL: windowed vetting suites exited $windowed_status"
+  exit "$windowed_status"
+fi
 if [ "$status" -ne 0 ]; then
   echo "[ci] FAIL: pytest exited $status"
   exit "$status"

@@ -7,9 +7,12 @@ forgetting across windows so regime changes (a straggler appearing, input
 storage degrading) surface within one window.
 
 Estimation is delegated to a ``repro.engine.VetEngine`` — this class is only
-the windowing/EMA wrapper around it.  Properties kept from the batch
-estimator: scale-equivariance, EI+OC == PR per window, vet >= 1 on
-well-formed profiles.
+the windowing/EMA wrapper around it.  Every estimate goes through the
+engine's memoized result cache, so a dashboard that re-ticks (``_estimate``
+re-run, or the ``sliding()`` per-sub-window view) over an unchanged buffer is
+served from the cache instead of re-running the compiled batch.  Properties
+kept from the batch estimator: scale-equivariance, EI+OC == PR per window,
+vet >= 1 on well-formed profiles.
 """
 
 from __future__ import annotations
@@ -79,7 +82,20 @@ class OnlineVet:
                 self._since_update = 0
         return out
 
+    def sliding(self, window: int, stride: int = 1):
+        """Batched vet over every sliding sub-window of the current buffer.
+
+        The dashboard drill-down view: one ``VetEngine.vet_sliding`` call
+        (cached across ticks while the buffer is unchanged) instead of a
+        per-sub-window scalar loop.  Raises if fewer than ``window`` records
+        are buffered.
+        """
+        return self.engine.vet_sliding(np.asarray(self._buf), window=window,
+                                       stride=stride)
+
     def _estimate(self) -> OnlineVetSnapshot:
+        # vet_one funnels through the engine's cached vet_batch: a re-tick
+        # over an unchanged buffer is a cache hit, not a compiled call.
         window = np.asarray(self._buf)
         r = self.engine.vet_one(window)
         vet = float(r.vet)

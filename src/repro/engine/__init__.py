@@ -45,13 +45,31 @@ Backends (``VetEngine(backend=...)``):
 Ragged inputs (workers with different record counts) go through
 ``vet_many``, which groups equal-length profiles and runs one batched call
 per group.  ``vet_one`` is the scalar convenience wrapper.
+
+Windowed vetting (the downstream workloads — KS population tests, record-time
+distributions, vet/time correlation, online dashboards — all evaluate vet over
+*many overlapping windows* of one stream):
+
+- ``vet_sliding(times, window, stride)`` — every stride-spaced window of a
+  stream, materialized by one vectorized gather and vetted in one batched
+  dispatch.
+- ``vet_windows(times, slices)`` — arbitrary ragged ``(lo, hi)`` windows,
+  grouped by length, one batched dispatch per distinct length.
+
+Every public entry point is memoized in a bounded per-engine result cache
+keyed on a fingerprint of the input buffer + call parameters
+(``cache_size=`` to bound or disable; ``cache_info()``/``cache_clear()`` to
+inspect), so repeated ``decide()``/dashboard ticks over an unchanged window
+are served from the cache.
 """
 
 from .engine import (
     BACKENDS,
     BatchVetResult,
+    CacheInfo,
     VetEngine,
     default_engine,
 )
 
-__all__ = ["BACKENDS", "BatchVetResult", "VetEngine", "default_engine"]
+__all__ = ["BACKENDS", "BatchVetResult", "CacheInfo", "VetEngine",
+           "default_engine"]

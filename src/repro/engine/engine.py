@@ -13,12 +13,25 @@ notes:
 - Results are returned as host NumPy arrays (``BatchVetResult``): the
   consumers are control loops (schedulers, dashboards) that immediately
   branch on the values.
+- Windowed entry points (``vet_sliding`` / ``vet_windows``) materialize the
+  (num_windows, window) matrix with one vectorized gather and push it through
+  the same compiled ``vet_batch`` — one dispatch per distinct window length,
+  never one per window.
+- Every public entry point is memoized in a bounded LRU result cache keyed on
+  a fingerprint of the input buffer(s) plus the call parameters; the engine
+  config is fixed per instance, so a (buffer, params) hit is exact.  Cached
+  result arrays are frozen (``writeable=False``) so a hit can hand back the
+  stored object without defensive copies.  Control loops that re-``decide()``
+  or redraw a dashboard over an unchanged window therefore pay ~a hash of the
+  buffer instead of a compiled call.
 """
 
 from __future__ import annotations
 
+import collections
 import functools
-from typing import NamedTuple, Optional, Sequence
+import hashlib
+from typing import Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -27,9 +40,24 @@ import numpy as np
 from ..core.vet import VetResult, vet_pipeline, vet_task
 from ..kernels.changepoint.ops import auto_block, changepoint_pallas
 
-__all__ = ["BACKENDS", "BatchVetResult", "VetEngine", "default_engine"]
+__all__ = [
+    "BACKENDS",
+    "BatchVetResult",
+    "CacheInfo",
+    "VetEngine",
+    "default_engine",
+]
 
 BACKENDS = ("numpy", "jax", "pallas")
+
+
+class CacheInfo(NamedTuple):
+    """Result-cache counters (``VetEngine.cache_info()``)."""
+
+    hits: int
+    misses: int
+    size: int
+    max_size: int
 
 
 class BatchVetResult(NamedTuple):
@@ -71,6 +99,9 @@ class VetEngine:
     and ``cut_space`` ("log" framework default / "raw" paper-literal).
     ``backend`` picks the execution path, see ``repro.engine`` docstring;
     ``interpret`` keeps the Pallas kernel in interpret mode (CPU containers).
+    ``cache_size`` bounds the memoized result cache (LRU over input
+    fingerprints; 0 disables it) so repeated ticks over an unchanged buffer
+    return the stored result instead of re-running the compiled batch.
     """
 
     def __init__(
@@ -81,6 +112,7 @@ class VetEngine:
         buckets: Optional[int] = 1000,
         cut_space: str = "log",
         interpret: bool = True,
+        cache_size: int = 128,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
@@ -92,6 +124,14 @@ class VetEngine:
         self.cut_space = cut_space
         self.interpret = interpret
         self._batch_fn = None  # compiled lazily on first vet_batch
+        # Memoized results: fingerprint(buffer) + params -> BatchVetResult.
+        # cache_size=0 disables memoization (e.g. for honest benchmarking).
+        self._cache_size = int(cache_size)
+        self._cache: "collections.OrderedDict[tuple, BatchVetResult]" = (
+            collections.OrderedDict()
+        )
+        self._cache_hits = 0
+        self._cache_misses = 0
 
     def __repr__(self) -> str:
         return (f"VetEngine(backend={self.backend!r}, omega={self.omega}, "
@@ -131,6 +171,54 @@ class VetEngine:
             n=np.asarray([r.n for r in results], dtype=np.int64),
         )
 
+    # -------------------------------------------------------------- caching
+    def _key(self, tag: str, arrays: Sequence[np.ndarray], *params) -> tuple:
+        """Cache key: content fingerprint of the buffer(s) + call params.
+
+        The engine config (backend/omega/buckets/cut_space) is fixed per
+        instance and the cache is per instance, so it needs no key bits.
+        """
+        h = hashlib.blake2b(digest_size=16)
+        for a in arrays:
+            a = np.ascontiguousarray(a)
+            h.update(str(a.shape).encode())
+            h.update(str(a.dtype).encode())
+            h.update(a.tobytes())
+        return (tag, *params, h.hexdigest())
+
+    @staticmethod
+    def _freeze(res: BatchVetResult) -> BatchVetResult:
+        # Results are always read-only — cache hits alias the stored arrays,
+        # and mutability must not depend on the engine's cache config.
+        for a in res:
+            if isinstance(a, np.ndarray):
+                a.flags.writeable = False
+        return res
+
+    def _memo(self, key: tuple, compute: Callable[[], BatchVetResult]):
+        if self._cache_size <= 0:
+            return self._freeze(compute())
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+            self._cache_hits += 1
+            return hit
+        self._cache_misses += 1
+        res = self._freeze(compute())
+        self._cache[key] = res
+        while len(self._cache) > self._cache_size:
+            self._cache.popitem(last=False)
+        return res
+
+    def cache_info(self) -> CacheInfo:
+        return CacheInfo(hits=self._cache_hits, misses=self._cache_misses,
+                         size=len(self._cache), max_size=self._cache_size)
+
+    def cache_clear(self) -> None:
+        self._cache.clear()
+        self._cache_hits = 0
+        self._cache_misses = 0
+
     # ------------------------------------------------------------------ API
     def vet_batch(self, times_matrix) -> BatchVetResult:
         """Vet a (workers, window) matrix of raw record times in one call.
@@ -138,10 +226,15 @@ class VetEngine:
         Rows are independent profiles; a 1-D input is treated as one worker.
         For the ``jax``/``pallas`` backends the whole batch is a single
         compiled call; ``numpy`` loops the scalar reference per row.
+        Results are memoized on the matrix fingerprint.
         """
         m = np.atleast_2d(np.asarray(times_matrix, dtype=np.float64))
         if m.ndim != 2:
             raise ValueError(f"expected (workers, window) matrix, got {m.shape}")
+        return self._memo(self._key("batch", [m]),
+                          lambda: self._vet_batch_impl(m))
+
+    def _vet_batch_impl(self, m: np.ndarray) -> BatchVetResult:
         if self.backend == "numpy":
             return self._numpy_batch(m)
         if self._batch_fn is None:
@@ -172,6 +265,10 @@ class VetEngine:
                 for p in profiles]
         if not arrs:
             raise ValueError("vet_many needs at least one profile")
+        return self._memo(self._key("many", arrs),
+                          lambda: self._vet_many_impl(arrs))
+
+    def _vet_many_impl(self, arrs) -> BatchVetResult:
         w = len(arrs)
         vet = np.empty(w)
         ei = np.empty(w)
@@ -183,11 +280,103 @@ class VetEngine:
         for i, a in enumerate(arrs):
             groups.setdefault(a.size, []).append(i)
         for size, idxs in groups.items():
-            br = self.vet_batch(np.stack([arrs[i] for i in idxs]))
+            # _vet_batch_impl, not vet_batch: one cache entry per *public*
+            # call, no re-hash of the materialized per-group matrices.
+            br = self._vet_batch_impl(np.stack([arrs[i] for i in idxs]))
             for j, i in enumerate(idxs):
                 vet[i], ei[i], oc[i] = br.vet[j], br.ei[j], br.oc[j]
                 pr[i], t[i], n[i] = br.pr[j], br.t[j], br.n[j]
         return BatchVetResult(vet=vet, ei=ei, oc=oc, pr=pr, t=t, n=n)
+
+    # ------------------------------------------------------------- windowed
+    @staticmethod
+    def _as_stream(times) -> np.ndarray:
+        arr = np.asarray(times, dtype=np.float64)
+        if arr.ndim > 1:
+            raise ValueError(
+                f"windowed vetting expects a 1-D stream of record times, "
+                f"got shape {arr.shape}")
+        return np.atleast_1d(arr)
+
+    def vet_sliding(self, times, window: int, stride: int = 1) -> BatchVetResult:
+        """Vet every sliding window of a record-time stream in one call.
+
+        Window ``i`` covers ``times[i*stride : i*stride + window]``; the last
+        (possibly partial) tail that cannot fill a window is dropped, matching
+        the convention of the per-window loops this replaces.  The
+        (num_windows, window) matrix is materialized with one vectorized
+        gather and vetted by a single ``vet_batch`` dispatch.  Row ``k`` of
+        the result is window ``k`` in stream order.
+        """
+        t = self._as_stream(times)
+        window = int(window)
+        stride = int(stride)
+        if t.size == 0:
+            raise ValueError("vet_sliding needs a non-empty stream of record "
+                             "times")
+        if window < 2:
+            raise ValueError(f"window must cover >= 2 records, got {window}")
+        if stride < 1:
+            raise ValueError(f"stride must be >= 1, got {stride}")
+        if window > t.size:
+            raise ValueError(
+                f"window ({window}) exceeds the stream length ({t.size}); "
+                f"buffer at least one full window of records before vetting")
+        return self._memo(self._key("sliding", [t], window, stride),
+                          lambda: self._vet_sliding_impl(t, window, stride))
+
+    def _vet_sliding_impl(self, t, window, stride) -> BatchVetResult:
+        starts = np.arange(0, t.size - window + 1, stride)
+        gather = starts[:, None] + np.arange(window)[None, :]
+        return self._vet_batch_impl(t[gather])
+
+    def vet_windows(self, times, slices: Sequence) -> BatchVetResult:
+        """Vet arbitrary (possibly ragged, possibly overlapping) windows.
+
+        ``slices`` is a sequence of ``(lo, hi)`` half-open index pairs (plain
+        ``slice`` objects with step 1 also work) into the 1-D ``times``
+        stream.  Windows are gathered vectorized and grouped by length — one
+        ``vet_batch`` dispatch per distinct length — and results come back in
+        input order.  This is the ragged-window entry point the fig6/fig8
+        style "vet every sub-window of a stream" analyses route through.
+        """
+        t = self._as_stream(times)
+        bounds = self._normalize_slices(slices, t.size)
+        return self._memo(self._key("windows", [t, bounds]),
+                          lambda: self._vet_windows_impl(t, bounds))
+
+    @staticmethod
+    def _normalize_slices(slices, n: int) -> np.ndarray:
+        pairs = []
+        for s in slices:
+            if isinstance(s, slice):
+                if s.step not in (None, 1):
+                    raise ValueError(f"window slices must have step 1, got {s}")
+                lo, hi, _ = s.indices(n)
+            else:
+                try:
+                    lo, hi = (int(s[0]), int(s[1]))
+                except (TypeError, IndexError, ValueError):
+                    raise ValueError(
+                        f"each window must be a (lo, hi) pair or slice, "
+                        f"got {s!r}") from None
+            if not 0 <= lo < hi <= n:
+                raise ValueError(
+                    f"window ({lo}, {hi}) out of bounds for a stream of "
+                    f"{n} records (need 0 <= lo < hi <= {n})")
+            if hi - lo < 2:
+                raise ValueError(
+                    f"window ({lo}, {hi}) must cover >= 2 records")
+            pairs.append((lo, hi))
+        if not pairs:
+            raise ValueError("vet_windows needs at least one (lo, hi) window; "
+                             "got an empty slice list")
+        return np.asarray(pairs, dtype=np.int64)
+
+    def _vet_windows_impl(self, t, bounds) -> BatchVetResult:
+        # Same group-by-length batching as ragged profiles; the slices are
+        # views, so the per-group stack is the materializing gather.
+        return self._vet_many_impl([t[lo:hi] for lo, hi in bounds])
 
     def vet_job(self, profiles: Sequence) -> float:
         """Mean per-task vet over ragged profiles (paper §4.4)."""

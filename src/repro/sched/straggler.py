@@ -12,7 +12,10 @@ per-worker record profiles and emits concurrency / straggler decisions:
 
 Estimation routes through a ``repro.engine.VetEngine``: ``decide()`` vets
 all workers in one batched call (grouped by profile length when buffers fill
-unevenly) instead of a per-worker Python loop.
+unevenly) instead of a per-worker Python loop, and that call is memoized in
+the engine's result cache — a control loop that re-``decide()``s between feeds
+(dashboard ticks, idle polls) over unchanged buffers pays a buffer hash, not
+a compiled batch.
 """
 
 from __future__ import annotations

@@ -1,0 +1,295 @@
+"""Differential suite for windowed vetting (``vet_sliding`` / ``vet_windows``).
+
+The oracle is the per-window scalar loop the windowed API replaced: one
+``repro.core.vet.vet_task`` call per window (the ``numpy`` engine backend is
+that same loop batched).  The jax and pallas backends must reproduce it to
+1e-5 on simulator ground-truth profiles — including overlapping windows
+(stride < window), ragged slice lists, and the degenerate one-window case —
+so that routing fig6/fig8/fig14 and the online/controller paths through the
+batched gather is a pure performance change, never a numerical one.
+
+Also locks down the engine-level result cache (repeat calls over an unchanged
+buffer are bitwise-identical cache hits) and the windowed error contract
+(informative ``ValueError``s instead of shape errors inside jit).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import vet_task
+from repro.engine import CacheInfo, VetEngine
+from repro.profiling import simulate_records
+
+WINDOW_BACKENDS = ("jax", "pallas")
+
+
+def stream(n=600, seed=0):
+    return simulate_records(n, seed=seed).times
+
+
+def oracle_windows(times, bounds, **kw):
+    """The pre-engine path: one scalar vet_task per (lo, hi) window."""
+    return [vet_task(times[lo:hi], **kw) for lo, hi in bounds]
+
+
+def sliding_bounds(n, window, stride):
+    return [(lo, lo + window) for lo in range(0, n - window + 1, stride)]
+
+
+def assert_matches_oracle(res, oracle, rtol=1e-5):
+    assert res.workers == len(oracle)
+    np.testing.assert_allclose(res.vet, [float(r.vet) for r in oracle],
+                               rtol=rtol)
+    np.testing.assert_allclose(res.ei, [float(r.ei) for r in oracle],
+                               rtol=rtol)
+    np.testing.assert_allclose(res.oc, [float(r.oc) for r in oracle],
+                               rtol=rtol, atol=1e-9)
+    np.testing.assert_allclose(res.pr, [float(r.pr) for r in oracle],
+                               rtol=rtol)
+    np.testing.assert_array_equal(res.t, [int(r.t) for r in oracle])
+    np.testing.assert_array_equal(res.n, [r.n for r in oracle])
+
+
+# ------------------------------------------------------------- vet_sliding
+class TestSlidingDifferential:
+    @pytest.mark.parametrize("backend", WINDOW_BACKENDS)
+    @pytest.mark.parametrize("seed", (0, 3, 7))
+    def test_overlapping_windows_match_scalar_loop(self, backend, seed):
+        """stride < window (every record shared by 4 windows) at 1e-5."""
+        times = stream(600, seed)
+        res = VetEngine(backend, buckets=64).vet_sliding(times, window=64,
+                                                         stride=16)
+        oracle = oracle_windows(times, sliding_bounds(600, 64, 16), buckets=64)
+        assert_matches_oracle(res, oracle)
+
+    @pytest.mark.parametrize("backend", WINDOW_BACKENDS)
+    def test_non_overlapping_windows_match_scalar_loop(self, backend):
+        times = stream(512, seed=4)
+        res = VetEngine(backend, buckets=64).vet_sliding(times, window=64,
+                                                         stride=64)
+        oracle = oracle_windows(times, sliding_bounds(512, 64, 64), buckets=64)
+        assert_matches_oracle(res, oracle)
+
+    @pytest.mark.parametrize("backend", WINDOW_BACKENDS)
+    def test_degenerate_one_window(self, backend):
+        """window == stream length: exactly one row, equal to vet_task."""
+        times = stream(64, seed=2)
+        res = VetEngine(backend, buckets=64).vet_sliding(times, window=64)
+        assert res.workers == 1
+        assert_matches_oracle(res, [vet_task(times, buckets=64)])
+
+    def test_jax_large_windows_match_scalar_loop(self):
+        """Larger windows (buckets still auto-disabled: 128 < 4*64)."""
+        times = stream(600, seed=1)
+        res = VetEngine("jax", buckets=64).vet_sliding(times, window=128,
+                                                       stride=32)
+        oracle = oracle_windows(times, sliding_bounds(600, 128, 32), buckets=64)
+        assert_matches_oracle(res, oracle)
+
+    def test_pallas_large_windows_within_near_tie_tolerance(self):
+        """On larger windows the pallas trace can flip the cut between
+        *statistical near-ties* (documented in repro.engine); the contract
+        there is EI/OC/vet within 2% and PR exact — same as
+        test_vet_engine.py's batch contract."""
+        times = stream(600, seed=0)
+        res = VetEngine("pallas", buckets=64).vet_sliding(times, window=128,
+                                                          stride=32)
+        oracle = oracle_windows(times, sliding_bounds(600, 128, 32), buckets=64)
+        np.testing.assert_allclose(res.vet, [float(r.vet) for r in oracle],
+                                   rtol=3e-2)
+        np.testing.assert_allclose(res.pr, [float(r.pr) for r in oracle],
+                                   rtol=1e-5)
+        assert np.mean(res.t == [int(r.t) for r in oracle]) >= 0.9
+
+    def test_sliding_equals_vet_windows_on_same_bounds(self):
+        """The two windowed entry points agree with each other exactly."""
+        times = stream(400, seed=6)
+        eng = VetEngine("jax", buckets=64)
+        bounds = sliding_bounds(400, 64, 32)
+        a = eng.vet_sliding(times, window=64, stride=32)
+        b = eng.vet_windows(times, bounds)
+        np.testing.assert_array_equal(a.vet, b.vet)
+        np.testing.assert_array_equal(a.t, b.t)
+
+    def test_numpy_backend_is_the_scalar_loop(self):
+        """Sanity: the numpy backend's windowed result IS the oracle."""
+        times = stream(300, seed=9)
+        res = VetEngine("numpy", buckets=64).vet_sliding(times, window=64,
+                                                         stride=48)
+        oracle = oracle_windows(times, sliding_bounds(300, 64, 48), buckets=64)
+        assert_matches_oracle(res, oracle, rtol=1e-12)
+
+
+# ------------------------------------------------------------- vet_windows
+class TestRaggedDifferential:
+    SLICES = [(0, 64), (10, 74), (100, 196), (0, 256), (300, 364), (0, 600)]
+
+    @pytest.mark.parametrize("backend", WINDOW_BACKENDS)
+    @pytest.mark.parametrize("seed", (0, 5))
+    def test_ragged_slices_match_scalar_loop(self, backend, seed):
+        """Mixed window lengths (64/96/256/600), overlapping, unordered."""
+        times = stream(600, seed)
+        res = VetEngine(backend, buckets=64).vet_windows(times, self.SLICES)
+        assert_matches_oracle(res, oracle_windows(times, self.SLICES,
+                                                  buckets=64))
+
+    @pytest.mark.parametrize("backend", WINDOW_BACKENDS)
+    def test_single_ragged_window(self, backend):
+        times = stream(128, seed=8)
+        res = VetEngine(backend, buckets=64).vet_windows(times, [(0, 128)])
+        assert_matches_oracle(res, [vet_task(times, buckets=64)])
+
+    def test_slice_objects_accepted(self):
+        times = stream(300, seed=11)
+        eng = VetEngine("jax", buckets=64)
+        a = eng.vet_windows(times, [slice(0, 100), slice(50, 150)])
+        b = eng.vet_windows(times, [(0, 100), (50, 150)])
+        np.testing.assert_array_equal(a.vet, b.vet)
+
+    def test_paper_literal_estimator_matches(self):
+        """Equivalence must also hold for buckets=None / cut_space='raw'."""
+        times = stream(300, seed=10)
+        kw = dict(buckets=None, cut_space="raw")
+        res = VetEngine("jax", **kw).vet_windows(times, [(0, 150), (100, 300)])
+        assert_matches_oracle(res, oracle_windows(times, [(0, 150), (100, 300)],
+                                                  **kw))
+
+    def test_result_order_is_input_order(self):
+        """Length-grouped dispatch must scatter back to input positions."""
+        times = stream(400, seed=12)
+        slices = [(0, 64), (0, 128), (64, 128), (128, 256), (200, 264)]
+        res = VetEngine("jax", buckets=64).vet_windows(times, slices)
+        np.testing.assert_array_equal(res.n, [64, 128, 64, 128, 64])
+        for i, (lo, hi) in enumerate(slices):
+            np.testing.assert_allclose(
+                res.vet[i], float(vet_task(times[lo:hi], buckets=64).vet),
+                rtol=1e-5)
+
+
+# ------------------------------------------------------------ result cache
+class TestResultCache:
+    def test_repeat_call_is_bitwise_identical_cache_hit(self):
+        """The dashboard-tick contract: unchanged buffer => stored result."""
+        times = stream(400, seed=0)
+        eng = VetEngine("jax", buckets=64)
+        r1 = eng.vet_sliding(times, window=64, stride=32)
+        # one public call => one miss and one entry (impls bypass the memo)
+        assert eng.cache_info() == CacheInfo(hits=0, misses=1, size=1,
+                                             max_size=128)
+        misses = eng.cache_info().misses
+        r2 = eng.vet_sliding(times, window=64, stride=32)
+        info = eng.cache_info()
+        assert isinstance(info, CacheInfo)
+        assert info.misses == misses and info.hits >= 1
+        assert r2 is r1  # the stored object itself
+        for a, b in zip(r1, r2):
+            assert a.tobytes() == b.tobytes()
+
+    def test_vet_many_repeat_decide_tick_is_cached(self):
+        profiles = [stream(200, seed=1), stream(90, seed=2)]
+        eng = VetEngine("jax", buckets=64)
+        r1 = eng.vet_many(profiles)
+        r2 = eng.vet_many(profiles)
+        assert r2 is r1
+        assert eng.cache_info().hits >= 1
+
+    def test_changed_buffer_misses_and_differs(self):
+        times = stream(300, seed=3)
+        eng = VetEngine("jax", buckets=64)
+        r1 = eng.vet_sliding(times, window=64, stride=64)
+        bumped = times.copy()
+        bumped[200] *= 50.0  # a straggler lands in the 4th window (192:256)
+        r2 = eng.vet_sliding(bumped, window=64, stride=64)
+        assert r2 is not r1
+        assert r2.vet[3] != r1.vet[3]
+
+    def test_same_buffer_different_params_are_distinct_entries(self):
+        times = stream(300, seed=3)
+        eng = VetEngine("jax", buckets=64)
+        r1 = eng.vet_sliding(times, window=64, stride=64)
+        r2 = eng.vet_sliding(times, window=64, stride=32)
+        assert r2.workers != r1.workers
+
+    def test_cached_arrays_are_frozen(self):
+        """Hits alias the stored arrays, so they must be read-only."""
+        eng = VetEngine("jax", buckets=64)
+        res = eng.vet_sliding(stream(128, seed=4), window=64, stride=64)
+        with pytest.raises(ValueError):
+            res.vet[0] = 0.0
+
+    def test_cache_disabled_with_zero_size(self):
+        times = stream(128, seed=5)
+        eng = VetEngine("jax", buckets=64, cache_size=0)
+        r1 = eng.vet_sliding(times, window=64, stride=64)
+        r2 = eng.vet_sliding(times, window=64, stride=64)
+        assert r1 is not r2
+        assert eng.cache_info() == CacheInfo(0, 0, 0, 0)
+        np.testing.assert_array_equal(r1.vet, r2.vet)
+        # result mutability must not depend on the cache config
+        assert not r1.vet.flags.writeable
+
+    def test_cache_evicts_lru_beyond_capacity(self):
+        eng = VetEngine("numpy", buckets=64, cache_size=2)
+        streams = [stream(64, seed=s) for s in range(3)]
+        for s in streams:
+            eng.vet_batch(s[None, :])
+        assert eng.cache_info().size == 2
+        eng.vet_batch(streams[0][None, :])  # evicted => recomputed
+        assert eng.cache_info().misses == 4
+
+    def test_cache_clear(self):
+        eng = VetEngine("numpy", buckets=64)
+        eng.vet_one(stream(64, seed=6))
+        assert eng.cache_info().size > 0
+        eng.cache_clear()
+        assert eng.cache_info() == CacheInfo(0, 0, 0, 128)
+
+
+# ----------------------------------------------------------- error contract
+class TestWindowedErrors:
+    """Informative ValueErrors up front — never a shape error inside jit."""
+
+    def test_vet_many_empty_rejected(self):
+        # Regression guard: pre-existing contract on the ragged entry point.
+        with pytest.raises(ValueError, match="at least one profile"):
+            VetEngine("jax").vet_many([])
+
+    def test_vet_windows_empty_slices_rejected(self):
+        with pytest.raises(ValueError, match="at least one"):
+            VetEngine("jax").vet_windows(stream(64), [])
+
+    def test_vet_sliding_window_longer_than_stream_rejected(self):
+        with pytest.raises(ValueError, match="exceeds the stream length"):
+            VetEngine("jax").vet_sliding(stream(64), window=65)
+
+    def test_vet_sliding_empty_stream_rejected(self):
+        with pytest.raises(ValueError, match="non-empty"):
+            VetEngine("jax").vet_sliding(np.asarray([]), window=8)
+
+    def test_vet_sliding_bad_window_and_stride_rejected(self):
+        eng = VetEngine("jax")
+        with pytest.raises(ValueError, match="window"):
+            eng.vet_sliding(stream(64), window=1)
+        with pytest.raises(ValueError, match="stride"):
+            eng.vet_sliding(stream(64), window=8, stride=0)
+
+    def test_vet_windows_out_of_bounds_rejected(self):
+        eng = VetEngine("jax")
+        with pytest.raises(ValueError, match="out of bounds"):
+            eng.vet_windows(stream(64), [(0, 65)])
+        with pytest.raises(ValueError, match="out of bounds"):
+            eng.vet_windows(stream(64), [(-1, 32)])
+        with pytest.raises(ValueError, match="out of bounds"):
+            eng.vet_windows(stream(64), [(32, 32)])
+
+    def test_vet_windows_too_short_window_rejected(self):
+        with pytest.raises(ValueError, match=">= 2 records"):
+            VetEngine("jax").vet_windows(stream(64), [(5, 6)])
+
+    def test_vet_windows_malformed_entry_rejected(self):
+        with pytest.raises(ValueError, match="pair or slice"):
+            VetEngine("jax").vet_windows(stream(64), [7])
+
+    def test_windowed_rejects_matrix_input(self):
+        with pytest.raises(ValueError, match="1-D stream"):
+            VetEngine("jax").vet_sliding(np.ones((4, 64)), window=8)
