@@ -33,11 +33,13 @@ def run():
     # vet engine: batched numpy/jax/pallas backend comparison (small shapes
     # here; the full 64x512 / 64-window sweeps are the standalone vet_engine
     # suite)
-    from .vet_engine import bench_backends, bench_windowed
+    from .vet_engine import bench_backends, bench_streaming, bench_windowed
 
     out["vet_engine"] = bench_backends(workers=16, window=256, iters=3)
     out["vet_engine_windowed"] = bench_windowed(n_records=568, window=64,
                                                 stride=8, iters=3)
+    out["vet_engine_streaming"] = bench_streaming(n_records=8192, window=256,
+                                                  stride=256, chunk=1024)
 
     # flash attention 512 x 8h x 64d
     ks = jax.random.split(KEY, 3)

@@ -11,13 +11,22 @@ The windowed section times the same contrast on the *sliding-window* workload
 stream as one gather + one batched dispatch, against the numpy backend's
 per-window scalar loop, plus the cached-tick cost (same buffer re-vetted
 through the engine's result cache).
+
+The streaming section times the *live* workload (dashboard / controller /
+autotuner ticks on a growing stream): the amortized per-tick cost of a
+``VetStream`` (append a chunk, vet only the newly complete windows) against
+what a naive consumer pays per tick — a full ``vet_sliding`` re-gather over
+the whole buffer (batched backends) or the per-window scalar loop (numpy
+backend) — across all three backends.
 """
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
-from repro.engine import BACKENDS, VetEngine
+from repro.engine import BACKENDS, VetEngine, VetStream
 
 from .common import emit, save_json, time_fn
 
@@ -102,8 +111,63 @@ def bench_windowed(n_records: int = 1264, window: int = 256,
     return out
 
 
+def bench_streaming(n_records: int = 65536, window: int = 512,
+                    stride: int = 512, chunk: int = 2048) -> dict:
+    """Streaming tick: incremental ``VetStream`` vs full per-tick re-gather.
+
+    Feeds an ``n_records`` stream chunk-by-chunk; the stream's amortized
+    per-tick cost (append + vet only the delta windows) is contrasted with
+    the naive dashboard tick — a full ``vet_sliding`` over the final stream,
+    which is what a consumer that re-slices its whole buffer pays *every*
+    tick at steady state.  Engines run cache-disabled so every tick pays its
+    real compute.
+    """
+    from repro.profiling import simulate_records
+
+    times = simulate_records(n_records, seed=13).times
+    n_ticks = -(-n_records // chunk)
+    num_windows = (n_records - window) // stride + 1
+    out = {"n_records": n_records, "window": window, "stride": stride,
+           "chunk": chunk, "n_ticks": n_ticks, "num_windows": num_windows}
+    for backend in BACKENDS:
+        eng = VetEngine(backend, buckets=64, cache_size=0)
+        cap = max(4 * window, window + 2 * chunk)
+
+        def feed_stream():
+            st = VetStream(eng, window=window, stride=stride, capacity=cap)
+            for lo in range(0, n_records, chunk):
+                st.append(times[lo:lo + chunk])
+                st.tick()
+            return st
+
+        feed_stream()  # warmup: compile the delta-batch shapes
+        t0 = time.perf_counter()
+        st = feed_stream()
+        stream_us = (time.perf_counter() - t0) / n_ticks * 1e6
+        # steady-state naive tick: one full re-gather over the whole stream
+        eng.vet_sliding(times, window=window, stride=stride)  # warmup
+        regather_us = time_fn(
+            lambda: eng.vet_sliding(times, window=window, stride=stride),
+            warmup=0, iters=(1 if backend == "numpy" else 3)) * 1e6
+        out[backend] = {
+            "stream_tick_us": stream_us,
+            "regather_tick_us": regather_us,
+            "tick_speedup": regather_us / stream_us,
+            "vetted_rows": st.stats.vetted,
+        }
+        emit(f"vet_engine/stream_{backend}_{num_windows}w{window}",
+             stream_us,
+             f"regather_us={regather_us:.1f};"
+             f"speedup={regather_us / stream_us:.1f}x")
+    out["stream_speedup_vs_regather"] = out["jax"]["tick_speedup"]
+    emit(f"vet_engine/stream_summary_{num_windows}w{window}", 0.0,
+         f"jax_stream_speedup={out['stream_speedup_vs_regather']:.1f}x")
+    return out
+
+
 def run():
     out = bench_backends(workers=64, window=512)
     out["windowed"] = bench_windowed()
+    out["streaming"] = bench_streaming()
     save_json("vet_engine", out)
     return out

@@ -1,13 +1,17 @@
 #!/usr/bin/env bash
-# Tier-1 CI: install test extras, run the windowed-vetting differential suite
-# explicitly, then the full pytest suite, then a fast VetEngine smoke
-# benchmark (batch + windowed sections: backend agreement, batched-vs-scalar
-# speedup, cached-tick cost).
+# Tier-1 CI: install test extras, run the streaming + windowed vetting
+# differential suites explicitly (with JUnit XML reports), then the full
+# pytest suite, then a fast VetEngine smoke benchmark (batch + windowed +
+# streaming sections: backend agreement, batched-vs-scalar speedup,
+# cached-tick cost, incremental-tick-vs-regather speedup).
 #
 # Usage: scripts/ci.sh [extra pytest args...]
+# JUnit XML lands in ${CI_REPORTS_DIR:-reports}/ for CI systems that ingest it.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+REPORTS_DIR="${CI_REPORTS_DIR:-reports}"
+mkdir -p "$REPORTS_DIR"
 
 # Test extras: hypothesis powers the property suites; without it those tests
 # skip (importorskip), so an offline container still runs tier-1 green.
@@ -17,12 +21,23 @@ if ! python -c "import hypothesis" >/dev/null 2>&1; then
     || echo "[ci] WARNING: hypothesis unavailable (offline?); property tests will skip"
 fi
 
-# Windowed vetting first and explicitly (-x): these lock the batched
-# sliding/ragged path to the scalar oracle — if they break, the full-suite
-# report below is noise.
+# Streaming vetting first and explicitly (-x): the streaming differential
+# suite locks every incremental tick to the batch oracle, and the simulator
+# determinism suite pins the ground truth every oracle is built from — if
+# these break, the full-suite report below is noise.
+echo "[ci] streaming vetting: differential + simulator-determinism suites"
+streaming_status=0
+python -m pytest -q -x \
+  --junitxml="$REPORTS_DIR/streaming.xml" \
+  tests/test_vet_stream.py \
+  tests/test_simulator_determinism.py \
+  || streaming_status=$?
+
+# Windowed vetting next (same reasoning for the batched sliding/ragged path).
 echo "[ci] windowed vetting: differential + property + benchmark-smoke suites"
 windowed_status=0
 python -m pytest -q -x \
+  --junitxml="$REPORTS_DIR/windowed.xml" \
   tests/test_vet_windows.py \
   tests/test_vet_windows_properties.py \
   tests/test_benchmarks_smoke.py \
@@ -30,19 +45,26 @@ python -m pytest -q -x \
 
 # Full run (no -x) so the report covers every module, and the engine smoke
 # below still executes when a test fails; exit status reflects the tests.
-# The windowed suites already ran above, so they are not run twice.
+# The streaming/windowed suites already ran above, so they are not run twice.
 echo "[ci] tier-1: pytest"
 status=0
 python -m pytest -q \
+  --junitxml="$REPORTS_DIR/tier1.xml" \
+  --ignore=tests/test_vet_stream.py \
+  --ignore=tests/test_simulator_determinism.py \
   --ignore=tests/test_vet_windows.py \
   --ignore=tests/test_vet_windows_properties.py \
   --ignore=tests/test_benchmarks_smoke.py \
   "$@" || status=$?
 
-echo "[ci] smoke: VetEngine backend benchmark (batch + windowed sections)"
+echo "[ci] smoke: VetEngine backend benchmark (batch + windowed + streaming)"
 smoke_status=0
 python -m benchmarks.run --only vet_engine || smoke_status=$?
 
+if [ "$streaming_status" -ne 0 ]; then
+  echo "[ci] FAIL: streaming vetting suites exited $streaming_status"
+  exit "$streaming_status"
+fi
 if [ "$windowed_status" -ne 0 ]; then
   echo "[ci] FAIL: windowed vetting suites exited $windowed_status"
   exit "$windowed_status"

@@ -6,22 +6,19 @@ recent records and re-estimates (EI, OC, vet) incrementally, with exponential
 forgetting across windows so regime changes (a straggler appearing, input
 storage degrading) surface within one window.
 
-Estimation is delegated to a ``repro.engine.VetEngine`` — this class is only
-the windowing/EMA wrapper around it.  Every estimate goes through the
-engine's memoized result cache, so a dashboard that re-ticks (``_estimate``
-re-run, or the ``sliding()`` per-sub-window view) over an unchanged buffer is
-served from the cache instead of re-running the compiled batch.  Properties
-kept from the batch estimator: scale-equivariance, EI+OC == PR per window,
-vet >= 1 on well-formed profiles.
+Estimation is delegated to a ``repro.engine.stream.VetStream`` — this class
+is only the EMA wrapper around it.  ``feed`` appends whole chunks (O(chunk),
+no per-record Python loop) and window completions fall out of the stream's
+arithmetic; each completed half-window-spaced window is vetted by the
+stream's *incremental* tick (only the new windows are dispatched, earlier
+rows are reused, and replayed ticks hit the engine's result cache via the
+stream's rolling fingerprint).  Properties kept from the batch estimator:
+scale-equivariance, EI+OC == PR per window, vet >= 1 on well-formed profiles.
 """
 
 from __future__ import annotations
 
-from typing import Deque, List, NamedTuple, Optional
-
-import collections
-
-import numpy as np
+from typing import List, NamedTuple, Optional
 
 __all__ = ["OnlineVet", "OnlineVetSnapshot"]
 
@@ -35,11 +32,14 @@ class OnlineVetSnapshot(NamedTuple):
 
 
 class OnlineVet:
-    """Bounded-memory online vet.
+    """Online vet with an O(window) ring of live records.
 
-    feed(times) appends record times; every ``window`` records a fresh batch
-    estimate runs on the newest window and folds into an EMA.  O(window) memory
-    regardless of stream length.
+    feed(times) appends record times; every ``window // 2`` records (once the
+    first full window has filled) a fresh estimate runs on the newest window
+    and folds into an EMA.  Live records occupy an O(window) ring; the
+    backing stream additionally retains six scalars per completed window of
+    result history (its prefix-oracle contract), which grows with stream
+    length — bounding it is a tracked ROADMAP follow-up.
 
     ``engine`` is the backing ``VetEngine``; when omitted, a shared default
     (jax backend, ``buckets`` as given) is used.  With an explicit engine its
@@ -58,57 +58,73 @@ class OnlineVet:
 
             engine = default_engine("jax", buckets=buckets)
         self.engine = engine
-        self._buf: Deque[float] = collections.deque(maxlen=window)
-        self._since_update = 0
+        from ..engine import VetStream  # deferred: engine -> core.vet
+
+        # Half-window stride = the refresh cadence; 4x capacity keeps the
+        # sliding() drill-down view resident and bounds per-feed sub-chunks.
+        self._stream = VetStream(engine, window=window,
+                                 stride=max(1, window // 2),
+                                 capacity=4 * window)
+        self._emitted = 0  # windows already folded into the EMA
         self._smoothed: Optional[float] = None
         self._last: Optional[OnlineVetSnapshot] = None
 
     def feed(self, times) -> List[OnlineVetSnapshot]:
-        """Add record times; returns every snapshot emitted by this call.
+        """Add a chunk of record times; returns every snapshot it emits.
 
         A single call can span several window completions (e.g. a large chunk
         of buffered records arriving at once) — each completed window yields
         its own snapshot, in stream order.  An empty list means no window
-        completed.  (Earlier versions returned only the last snapshot,
-        silently dropping the intermediate ones.)
+        completed.  Chunks are appended vectorized; completions are computed
+        arithmetically by the backing stream, so chunked and record-at-a-time
+        feeds emit identical snapshot lists.
         """
-        arr = np.atleast_1d(np.asarray(times, dtype=np.float64))
         out: List[OnlineVetSnapshot] = []
-        for t in arr:
-            self._buf.append(float(t))
-            self._since_update += 1
-            if len(self._buf) >= self.window and self._since_update >= self.window // 2:
-                out.append(self._estimate())
-                self._since_update = 0
+        # feed() sub-chunks internally so a huge append can never outrun the
+        # ring; one tick then yields every window this call completed.
+        self._stream.feed(times)
+        res = self._stream.tick()
+        if res is not None:
+            # Windows re-vetted via stream.amend()/invalidate() since the
+            # last feed re-fold from the first corrected row (the EMA is
+            # order-sensitive, so a correction perturbs rather than rewrites
+            # the smoothed history — but snapshots reflect corrected data).
+            rewound = self._stream.consume_rewind()
+            if rewound is not None:
+                self._emitted = min(self._emitted, rewound)
+            for k in range(self._emitted, res.workers):
+                out.append(self._fold(float(res.vet[k]), float(res.ei[k]),
+                                      float(res.pr[k])))
+            self._emitted = res.workers
         return out
+
+    def _fold(self, vet: float, ei: float, pr: float) -> OnlineVetSnapshot:
+        self._smoothed = (vet if self._smoothed is None
+                          else self.alpha * vet + (1 - self.alpha) * self._smoothed)
+        self._last = OnlineVetSnapshot(
+            vet=vet,
+            ei_rate=ei / self.window,
+            pr_rate=pr / self.window,
+            n_window=self.window,
+            smoothed_vet=self._smoothed,
+        )
+        return self._last
 
     def sliding(self, window: int, stride: int = 1):
         """Batched vet over every sliding sub-window of the current buffer.
 
         The dashboard drill-down view: one ``VetEngine.vet_sliding`` call
-        (cached across ticks while the buffer is unchanged) instead of a
-        per-sub-window scalar loop.  Raises if fewer than ``window`` records
+        (cached across ticks while the buffer is unchanged) over the newest
+        ``self.window`` records.  Raises if fewer than ``window`` records
         are buffered.
         """
-        return self.engine.vet_sliding(np.asarray(self._buf), window=window,
-                                       stride=stride)
+        return self.engine.vet_sliding(self._stream.latest(self.window),
+                                       window=window, stride=stride)
 
-    def _estimate(self) -> OnlineVetSnapshot:
-        # vet_one funnels through the engine's cached vet_batch: a re-tick
-        # over an unchanged buffer is a cache hit, not a compiled call.
-        window = np.asarray(self._buf)
-        r = self.engine.vet_one(window)
-        vet = float(r.vet)
-        self._smoothed = (vet if self._smoothed is None
-                          else self.alpha * vet + (1 - self.alpha) * self._smoothed)
-        self._last = OnlineVetSnapshot(
-            vet=vet,
-            ei_rate=float(r.ei) / window.size,
-            pr_rate=float(r.pr) / window.size,
-            n_window=window.size,
-            smoothed_vet=self._smoothed,
-        )
-        return self._last
+    @property
+    def stream(self):
+        """The backing ``VetStream`` (stats, resident buffer, amend hooks)."""
+        return self._stream
 
     @property
     def snapshot(self) -> Optional[OnlineVetSnapshot]:

@@ -57,10 +57,21 @@ distributions, vet/time correlation, online dashboards — all evaluate vet over
   grouped by length, one batched dispatch per distinct length.
 
 Every public entry point is memoized in a bounded per-engine result cache
-keyed on a fingerprint of the input buffer + call parameters
-(``cache_size=`` to bound or disable; ``cache_info()``/``cache_clear()`` to
-inspect), so repeated ``decide()``/dashboard ticks over an unchanged window
-are served from the cache.
+keyed on per-buffer content fingerprints + call parameters (``cache_size=``
+to bound or disable; ``cache_info()``/``cache_clear()`` to inspect;
+``invalidate(buffer)`` to eagerly evict every entry computed from an
+explicitly mutated buffer), so repeated ``decide()``/dashboard ticks over an
+unchanged window are served from the cache.
+
+Streaming (the live-consumer path — dashboards, controllers and autotuners
+that re-estimate on every tick of a growing stream):
+
+- ``VetStream(engine, window=, stride=, capacity=)`` — a fixed-capacity ring
+  buffer with O(chunk) ``append`` (rolling fingerprint, no whole-buffer
+  re-hash) whose ``tick()`` vets only the windows that became complete since
+  the last tick, reusing all earlier rows; every tick's result equals
+  ``vet_sliding`` over the same logical prefix.  ``amend``/``invalidate``
+  are the mutation hooks that make stale cache hits impossible.
 """
 
 from .engine import (
@@ -70,6 +81,7 @@ from .engine import (
     VetEngine,
     default_engine,
 )
+from .stream import StreamStats, VetStream
 
-__all__ = ["BACKENDS", "BatchVetResult", "CacheInfo", "VetEngine",
-           "default_engine"]
+__all__ = ["BACKENDS", "BatchVetResult", "CacheInfo", "StreamStats",
+           "VetEngine", "VetStream", "default_engine"]

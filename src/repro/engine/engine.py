@@ -172,19 +172,57 @@ class VetEngine:
         )
 
     # -------------------------------------------------------------- caching
-    def _key(self, tag: str, arrays: Sequence[np.ndarray], *params) -> tuple:
-        """Cache key: content fingerprint of the buffer(s) + call params.
-
-        The engine config (backend/omega/buckets/cut_space) is fixed per
-        instance and the cache is per instance, so it needs no key bits.
-        """
+    @staticmethod
+    def _digest(a: np.ndarray) -> str:
+        """Content fingerprint of one buffer (shape + dtype + bytes)."""
+        a = np.ascontiguousarray(a)
         h = hashlib.blake2b(digest_size=16)
-        for a in arrays:
-            a = np.ascontiguousarray(a)
-            h.update(str(a.shape).encode())
-            h.update(str(a.dtype).encode())
-            h.update(a.tobytes())
-        return (tag, *params, h.hexdigest())
+        h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
+        h.update(a.tobytes())
+        return h.hexdigest()
+
+    def _key(self, tag: str, arrays: Sequence[np.ndarray], *params) -> tuple:
+        """Cache key: per-buffer content fingerprints + call params.
+
+        Each input buffer is fingerprinted *separately* (a tuple of digests,
+        not one rolled-up hash) so ``invalidate(buffer)`` can find every
+        cached result that was computed from a given buffer, including
+        multi-buffer entries (``vet_many`` / ``vet_windows``).  The engine
+        config (backend/omega/buckets/cut_space) is fixed per instance and
+        the cache is per instance, so it needs no key bits.
+        """
+        return (tag, *params, tuple(self._digest(a) for a in arrays))
+
+    def invalidate(self, buffer) -> int:
+        """Evict every cached result computed from ``buffer``; return count.
+
+        The cache is keyed on buffer *content*, so an in-place mutation
+        already changes the key and can never serve a stale hit — but the
+        stale entries for the pre-mutation content stay resident until LRU
+        pressure ages them out.  ``invalidate`` drops them eagerly: call it
+        with the buffer (pre- or post-mutation content both work if you hold
+        the respective arrays; matching is by content) when a consumer
+        explicitly mutates a profile it previously vetted.  Streams built on
+        this engine (``repro.engine.stream.VetStream``) key their incremental
+        dispatches on an epoch-tagged rolling fingerprint instead and expose
+        their own ``invalidate()``/``amend()`` hooks.
+        """
+        arr = np.asarray(buffer)
+        digests = {self._digest(arr)}
+        # The canonical forms the public entry points hash: vet_batch's
+        # atleast_2d float64 matrix, and the 1-D float64 stream/profile view
+        # used by vet_many / vet_sliding / vet_windows.
+        as64 = np.asarray(buffer, dtype=np.float64)
+        digests.add(self._digest(np.atleast_2d(as64)))
+        if as64.ndim <= 1:
+            digests.add(self._digest(np.atleast_1d(as64).ravel()))
+        dead = [k for k in self._cache
+                if digests.intersection(k[-1] if isinstance(k[-1], tuple)
+                                        else (k[-1],))]
+        for k in dead:
+            del self._cache[k]
+        return len(dead)
 
     @staticmethod
     def _freeze(res: BatchVetResult) -> BatchVetResult:

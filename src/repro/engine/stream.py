@@ -1,0 +1,406 @@
+"""VetStream: incremental sliding-window vetting over a live record stream.
+
+``VetEngine.vet_sliding`` answers "vet every window of this buffer" in one
+batched call, and the engine's result cache makes a *repeat* of the identical
+call free — but a live consumer (dashboard tick, straggler controller,
+autotuner) never repeats the identical call: every tick the buffer has grown
+by a chunk, so the whole buffer is re-gathered, re-hashed and re-vetted even
+though only a handful of windows near the head are new.  ``VetStream`` is the
+streaming path:
+
+- **Ring buffer.**  A fixed-capacity ring of record times; ``append(chunk)``
+  is O(chunk) regardless of how many records the stream has ever seen.
+  Logical stream position ``p`` lives in ring slot ``p % capacity``, so a
+  window's rows gather with one vectorized modular index.
+- **Rolling fingerprint.**  Appends fold into a running blake2b digest —
+  O(chunk), never a re-hash of the whole buffer.  The fingerprint (plus an
+  epoch counter bumped by explicit invalidation) keys the engine-cache
+  entries for each incremental dispatch, so replaying the same stream into
+  the same engine hits the cache without hashing any matrix.
+- **Incremental tick.**  ``tick()`` vets only the windows that became
+  complete since the last tick — one batched engine dispatch over the delta —
+  and splices the new rows into the accumulated per-window results.  Rows for
+  old windows are reused from the previous tick, never re-vetted.  Each tick
+  returns a ``BatchVetResult`` over *all* complete windows so far, equal to
+  ``engine.vet_sliding(prefix, window, stride)`` on the same logical prefix
+  (bitwise for the numpy backend; the jax/pallas backends carry their usual
+  differential contracts — see ``tests/test_vet_stream.py``).
+- **Invalidation-aware caching.**  Mutating history is explicit:
+  ``amend(start, values)`` rewrites resident records, re-keys the fingerprint
+  (epoch tag) and re-vets exactly the windows that saw the amended records on
+  the next tick; ``invalidate()`` is the blanket hook ("I changed the ring
+  under you") that re-vets every window still fully resident.  Either way a
+  stale cache hit is impossible: pre-mutation keys are never issued again.
+
+The stream guarantees oracle equality only while every newly completed window
+is still fully resident at tick time; if appends outrun the ring
+(``capacity`` too small or ticks too rare), ``tick()`` raises instead of
+silently skipping windows.  ``feed()`` is the self-managing ingest wrapper:
+it sub-chunks an arbitrarily large append and ticks exactly when a further
+append could overrun an unvetted window, so callers never track the budget
+themselves.
+
+Memory: the ring is O(capacity) records, and the accumulated result rows are
+six scalars per complete window (~48 bytes) — the cost of the prefix-oracle
+contract (every tick returns *all* windows so far).  A consumer that only
+wants the newest rows can slice them off and let the returned snapshot go;
+bounding the retained history (a rolling result window) is the
+donated-buffer follow-up tracked in the ROADMAP.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+from .engine import BatchVetResult, VetEngine, default_engine
+
+__all__ = ["StreamStats", "VetStream"]
+
+_GROW = 64  # initial per-field result capacity (windows); doubles as needed
+
+
+class StreamStats(NamedTuple):
+    """Counters for one stream (``VetStream.stats``)."""
+
+    ticks: int  # tick() calls
+    records: int  # records ever appended
+    windows: int  # complete windows so far
+    vetted: int  # window rows computed by engine dispatches
+    reused: int  # window rows served from earlier ticks (sum over ticks)
+    epoch: int  # invalidation epoch (amend/invalidate bumps)
+
+
+class VetStream:
+    """Incremental rolling-buffer vetting bound to one ``VetEngine``.
+
+    Window ``k`` covers logical records ``[k*stride, k*stride + window)`` of
+    the append stream — the same convention as ``vet_sliding``.  Usage::
+
+        stream = VetStream(engine, window=512, stride=256)
+        for chunk in source:
+            stream.append(chunk)          # O(chunk)
+            res = stream.tick()           # vets only newly complete windows
+            if res is not None:
+                dashboard.update(res.vet[-1], res.vet_job)
+
+    ``capacity`` bounds resident records (default ``4 * window``); it must be
+    at least ``window``, and between two ticks you may append at most
+    ``capacity - window - stride + 1`` records without losing a window.
+    """
+
+    def __init__(self, engine: Optional[VetEngine] = None, *, window: int,
+                 stride: int = 1, capacity: Optional[int] = None):
+        window = int(window)
+        stride = int(stride)
+        if window < 2:
+            raise ValueError(f"window must cover >= 2 records, got {window}")
+        if stride < 1:
+            raise ValueError(f"stride must be >= 1, got {stride}")
+        capacity = int(capacity) if capacity is not None else 4 * window
+        if capacity < window:
+            raise ValueError(
+                f"capacity ({capacity}) must hold at least one window "
+                f"({window} records)")
+        self.engine = engine if engine is not None else default_engine("jax")
+        self.window = window
+        self.stride = stride
+        self.capacity = capacity
+        self._ring = np.zeros(capacity, dtype=np.float64)
+        self._total = 0  # records ever appended (logical stream length)
+        self._vetted = 0  # windows whose rows are current in the result arrays
+        self._epoch = 0
+        self._fp = hashlib.blake2b(digest_size=16)
+        self._ticks = 0
+        self._vetted_rows = 0
+        self._reused_rows = 0
+        self._last: Optional[BatchVetResult] = None
+        # Accumulated per-window rows (amortized-doubling growth).  Results
+        # are frozen *views* of these arrays — O(delta) per tick, not
+        # O(windows-so-far) copies — so rows already exposed to callers are
+        # never written again: a rewind (amend/invalidate) below the exposed
+        # watermark reallocates fresh row storage first (copy-on-write),
+        # leaving outstanding snapshots aliasing the detached buffers.
+        self._rows = {
+            "vet": np.empty(_GROW), "ei": np.empty(_GROW),
+            "oc": np.empty(_GROW), "pr": np.empty(_GROW),
+            "t": np.empty(_GROW, dtype=np.int32),
+            "n": np.empty(_GROW, dtype=np.int64),
+        }
+        self._exposed = 0  # rows handed out in some result so far
+        self._dirty_low: Optional[int] = None  # lowest re-vetted exposed row
+
+    def __repr__(self) -> str:
+        return (f"VetStream(window={self.window}, stride={self.stride}, "
+                f"capacity={self.capacity}, records={self._total}, "
+                f"windows={self.complete_windows}, epoch={self._epoch})")
+
+    # ------------------------------------------------------------ geometry
+    @property
+    def total_records(self) -> int:
+        """Records ever appended (logical stream length)."""
+        return self._total
+
+    @property
+    def complete_windows(self) -> int:
+        """Windows fully covered by the stream so far."""
+        if self._total < self.window:
+            return 0
+        return (self._total - self.window) // self.stride + 1
+
+    @property
+    def stats(self) -> StreamStats:
+        return StreamStats(ticks=self._ticks, records=self._total,
+                           windows=self.complete_windows,
+                           vetted=self._vetted_rows, reused=self._reused_rows,
+                           epoch=self._epoch)
+
+    @property
+    def fingerprint(self) -> str:
+        """Rolling content fingerprint of the append/amend history."""
+        return self._fp.hexdigest()
+
+    def resident(self) -> np.ndarray:
+        """Copy of the retained record suffix, in stream order."""
+        lo = max(0, self._total - self.capacity)
+        return self._ring[np.arange(lo, self._total) % self.capacity]
+
+    def latest(self, n: int) -> np.ndarray:
+        """Copy of the last ``min(n, resident)`` records, in stream order."""
+        lo = max(0, self._total - min(int(n), self.capacity))
+        return self._ring[np.arange(lo, self._total) % self.capacity]
+
+    # ------------------------------------------------------------- writing
+    def _write(self, arr: np.ndarray, pos0: int) -> None:
+        """Write ``arr`` (len <= capacity) at logical position ``pos0``."""
+        s = pos0 % self.capacity
+        k = min(arr.size, self.capacity - s)
+        self._ring[s:s + k] = arr[:k]
+        if arr.size > k:
+            self._ring[:arr.size - k] = arr[k:]
+
+    @staticmethod
+    def _coerce(times) -> np.ndarray:
+        arr = np.asarray(times, dtype=np.float64)
+        if arr.ndim > 1:
+            raise ValueError(
+                f"append expects a 1-D chunk of record times, got shape "
+                f"{arr.shape}")
+        return np.ascontiguousarray(np.atleast_1d(arr))
+
+    def append(self, times) -> int:
+        """Append a chunk of record times; O(chunk).  Returns records added.
+
+        The raw primitive: no safety ticks — between two ``tick()`` calls the
+        caller may append at most ``capacity - window - stride + 1`` records
+        before an unvetted window falls out of the ring (``tick`` then
+        raises).  Use ``feed`` to have the stream manage that budget itself.
+        """
+        arr = self._coerce(times)
+        if arr.size == 0:
+            return 0
+        self._fp.update(arr.tobytes())  # rolling: O(chunk), never the buffer
+        if arr.size >= self.capacity:
+            self._write(arr[-self.capacity:], self._total + arr.size
+                        - self.capacity)
+        else:
+            self._write(arr, self._total)
+        self._total += arr.size
+        return arr.size
+
+    def feed(self, times) -> int:
+        """Append an arbitrarily large chunk, ticking only when forced.
+
+        Splits the chunk so that no unvetted window can fall out of the ring:
+        a mid-feed ``tick()`` happens exactly when the remaining append
+        budget is exhausted (its result rows are retained as usual — the
+        next ``tick()`` returns them without re-dispatch).  Ingest therefore
+        stays O(chunk) unless overrun protection forces estimation work that
+        any later ``tick()`` would have had to pay anyway.
+        """
+        arr = self._coerce(times)
+        pos = 0
+        while pos < arr.size:
+            # Records we may still append before the first unvetted window's
+            # start (vetted * stride) would leave the resident suffix.
+            budget = self._vetted * self.stride + self.capacity - self._total
+            if budget <= 0:
+                self.tick()  # advances _vetted; budget >= capacity-window+1
+                continue
+            pos += self.append(arr[pos:pos + budget])
+        return arr.size
+
+    # ------------------------------------------------------------- ticking
+    def _gather(self, starts: np.ndarray) -> np.ndarray:
+        idx = (starts[:, None] + np.arange(self.window)[None, :]) \
+            % self.capacity
+        return self._ring[idx]
+
+    def tick(self) -> Optional[BatchVetResult]:
+        """Vet the windows that became complete since the last tick.
+
+        Returns a ``BatchVetResult`` over **all** complete windows of the
+        stream so far (row ``k`` = window ``k``), or ``None`` while no window
+        is complete yet.  Only the delta since the last tick is dispatched to
+        the engine; earlier rows are reused.  A no-op tick (no new windows)
+        returns the previous result object itself.
+
+        Raises ``ValueError`` if an unvetted window's records were already
+        overwritten in the ring (appends outran ``capacity`` between ticks).
+        """
+        self._ticks += 1
+        n_complete = self.complete_windows
+        if n_complete == 0:
+            return None
+        if n_complete > self._vetted:
+            first_start = self._vetted * self.stride
+            if first_start < self._total - self.capacity:
+                raise ValueError(
+                    f"stream overran the ring buffer: window "
+                    f"{self._vetted} starts at record {first_start} but only "
+                    f"records [{self._total - self.capacity}, {self._total}) "
+                    f"are resident; tick() more often or raise capacity "
+                    f"({self.capacity})")
+            starts = np.arange(self._vetted, n_complete,
+                               dtype=np.int64) * self.stride
+            n_new = starts.size
+            matrix = self._gather(starts)
+            # Jitted backends compile one batch graph per row count; live
+            # deltas vary tick to tick, so pad to the next power of two
+            # (repeating the last row) and slice the result — compiles stay
+            # O(log max-delta) instead of one per distinct delta size.
+            if self.engine.backend != "numpy" and n_new > 1:
+                pad = 1 << (n_new - 1).bit_length()
+                if pad != n_new:
+                    matrix = np.concatenate(
+                        [matrix, np.repeat(matrix[-1:], pad - n_new, axis=0)])
+            # Keyed on the rolling fingerprint + window span + epoch — the
+            # delta is a pure function of the (content-hashed) append/amend
+            # history, so no per-tick matrix re-hash is needed for a replay
+            # of the same stream to hit the engine cache.
+            key = ("stream", self.window, self.stride, self._vetted,
+                   n_complete, self._epoch, self._fp.hexdigest())
+            delta = self.engine._memo(
+                key, lambda: self.engine._vet_batch_impl(matrix))
+            if delta.workers > n_new:
+                delta = BatchVetResult(*(a[:n_new] for a in delta))
+            self._reused_rows += self._vetted
+            self._vetted_rows += n_new
+            self._splice(self._vetted, delta)
+            self._vetted = n_complete
+            self._last = None
+        elif self._last is not None:
+            self._reused_rows += n_complete
+            return self._last
+        w = n_complete
+        fields = {}
+        for name in ("vet", "ei", "oc", "pr", "t", "n"):
+            v = self._rows[name][:w]
+            v.flags.writeable = False  # restricts the view, not the base
+            fields[name] = v
+        res = BatchVetResult(**fields)
+        self._exposed = max(self._exposed, w)
+        self._last = res
+        return res
+
+    def _splice(self, at: int, delta: BatchVetResult) -> None:
+        need = at + delta.workers
+        cap = self._rows["vet"].size
+        # Copy-on-write: rows < _exposed alias results already handed out;
+        # a rewind (amend/invalidate) about to overwrite them detaches the
+        # old storage so those snapshots stay pristine.  Growth past capacity
+        # reallocates anyway, which detaches just the same.
+        if need > cap or at < self._exposed:
+            new_cap = max(need, 2 * cap)
+            for name, arr in self._rows.items():
+                grown = np.empty(new_cap, dtype=arr.dtype)
+                grown[:at] = arr[:at]
+                self._rows[name] = grown
+            self._exposed = min(self._exposed, at)
+        for name in ("vet", "ei", "oc", "pr", "t"):
+            self._rows[name][at:need] = getattr(delta, name)
+        self._rows["n"][at:need] = self.window
+
+    # -------------------------------------------------------- invalidation
+    def amend(self, start: int, values) -> None:
+        """Rewrite resident records ``[start, start + len(values))`` in place.
+
+        The targeted invalidation hook: a profiler revising recently observed
+        record times (clock correction, late attribution) amends them here
+        instead of rebuilding the stream.  The rolling fingerprint is re-keyed
+        (epoch tag), and the next ``tick()`` re-vets exactly the already-vetted
+        windows from the first one covering ``start`` — never the whole
+        history — so no stale cached row survives.  Amending records that are
+        no longer resident (or whose re-vettable windows already left the
+        ring) raises.
+        """
+        vals = np.atleast_1d(np.asarray(values, dtype=np.float64)).ravel()
+        start = int(start)
+        end = start + vals.size
+        if vals.size == 0:
+            return
+        if start < 0 or end > self._total:
+            raise ValueError(
+                f"amend range [{start}, {end}) outside the appended stream "
+                f"[0, {self._total})")
+        if start < self._total - self.capacity:
+            raise ValueError(
+                f"amend range [{start}, {end}) starts before the resident "
+                f"suffix [{self._total - self.capacity}, {self._total})")
+        # First window that sees any amended record.
+        first_affected = (0 if start < self.window
+                          else (start - self.window) // self.stride + 1)
+        if first_affected < self._vetted:
+            # Those rows must be recomputed — their windows must still be
+            # fully resident.
+            lo_resident = max(0, self._total - self.capacity)
+            if first_affected * self.stride < lo_resident:
+                raise ValueError(
+                    f"amend at record {start} affects window "
+                    f"{first_affected}, which is no longer fully resident; "
+                    f"raise capacity ({self.capacity}) to amend that far back")
+        self._write(vals, start)
+        self._epoch += 1
+        self._fp.update(b"|amend|")
+        self._fp.update(np.int64(start).tobytes())
+        self._fp.update(vals.tobytes())
+        self._mark_rewound(first_affected)
+
+    def invalidate(self) -> int:
+        """Blanket hook: the ring was mutated outside ``append``/``amend``.
+
+        Bumps the epoch, folds the *current* resident content into the
+        rolling fingerprint (so future cache keys reflect what is actually in
+        the ring, not the stale append history), and marks every window still
+        fully resident for re-vetting on the next ``tick()``.  Rows for
+        windows that already left the ring keep their last computed values —
+        they cannot be recomputed from evicted records.  Returns the number
+        of window rows scheduled for re-vetting.
+        """
+        self._epoch += 1
+        self._fp.update(b"|invalidate|")
+        self._fp.update(self.resident().tobytes())
+        lo_resident = max(0, self._total - self.capacity)
+        first_resident = -(-lo_resident // self.stride)  # ceil div
+        dropped = max(0, self._vetted - first_resident)
+        self._mark_rewound(first_resident)
+        return dropped
+
+    def _mark_rewound(self, first_dirty: int) -> None:
+        if first_dirty < self._vetted:
+            self._dirty_low = (first_dirty if self._dirty_low is None
+                               else min(self._dirty_low, first_dirty))
+        self._vetted = min(self._vetted, first_dirty)
+        self._last = None
+
+    def consume_rewind(self) -> Optional[int]:
+        """Lowest row index re-vetted by ``amend``/``invalidate`` since the
+        last call, or ``None``.  Incremental consumers that fold rows exactly
+        once (e.g. ``OnlineVet``'s EMA) poll this to know which already-
+        consumed rows were recomputed and re-fold from there; reading it
+        clears the watermark.
+        """
+        low, self._dirty_low = self._dirty_low, None
+        return low

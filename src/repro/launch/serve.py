@@ -4,8 +4,10 @@ prefill(prompt batch) -> decode loop; every decode step is a profiled record
 (the paper's reduce-write analogue), so a serving deployment gets the same
 optimality dashboard as training: vet per serving worker (estimated by the
 shared ``VetEngine``), EI as the estimated ideal per-token latency, and
-per-window snapshots (one batched engine call) showing vet drift over the
-generation.
+per-window snapshots showing vet drift over the generation.  The window
+snapshots come from a ``VetStream`` ticked *inside* the decode loop — each
+completed unit-record is appended in O(1) and only newly completed windows
+are ever vetted — instead of re-slicing the full profile after the run.
 """
 
 from __future__ import annotations
@@ -19,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config
-from ..engine import BatchVetResult, VetEngine, default_engine
+from ..engine import BatchVetResult, VetEngine, VetStream, default_engine
 from ..models import decode_step, init_cache, init_params, prefill
 from ..profiling import RecordProfiler
 
@@ -35,8 +37,8 @@ class ServeResult:
     ei: Optional[float]
     pr: Optional[float]
     tokens_per_s: float
-    # Windowed per-worker snapshots from one batched engine call (None when
-    # the run produced fewer than two full windows).
+    # Windowed per-worker snapshots from the stream ticked during decode
+    # (None when the run produced fewer than two full windows).
     windows: Optional[BatchVetResult] = None
 
 
@@ -74,6 +76,16 @@ def serve(
     tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
 
     prof = RecordProfiler(unit=record_unit)
+    # Live window snapshots: a stream ticked as unit-records complete, so
+    # each tick vets only the windows the last unit finished (the snapshot
+    # windows are bucket-free at this size, so the stream engine needs no
+    # size-adapted bucket count).
+    stream = VetStream(engine if engine is not None
+                       else default_engine("jax", buckets=64),
+                       window=_SNAPSHOT_WINDOW, stride=_SNAPSHOT_WINDOW,
+                       capacity=4 * _SNAPSHOT_WINDOW)
+    fed_units = 0
+    vet_s = 0.0  # estimation overhead, excluded from the throughput wall
     out = [tok]
     for i in range(gen_len - 1):
         with prof.record():
@@ -81,7 +93,16 @@ def serve(
             tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             tok.block_until_ready()
         out.append(tok)
-    wall = time.perf_counter() - t0
+        if prof.num_records % record_unit == 0:
+            tv = time.perf_counter()
+            # O(new units) extraction + incremental tick: only the windows
+            # this unit completed are vetted.
+            new_units = prof.unit_times(start=fed_units)
+            stream.append(new_units)
+            fed_units += new_units.size
+            stream.tick()
+            vet_s += time.perf_counter() - tv
+    wall = time.perf_counter() - t0 - vet_s
     gen = np.asarray(jnp.concatenate(out, axis=1))
 
     vet = ei = pr = None
@@ -96,14 +117,16 @@ def serve(
         vet, ei, pr = float(r.vet), float(r.ei), float(r.pr)
         if verbose:
             print(f"[serve] vet={vet:.3f} EI={ei:.4f}s PR={pr:.4f}s")
-        k = times.size // _SNAPSHOT_WINDOW
-        if k >= 2:
-            windows = engine.vet_batch(
-                times[: k * _SNAPSHOT_WINDOW].reshape(k, _SNAPSHOT_WINDOW)
-            )
+        stream.append(times[fed_units:])  # trailing units after the loop
+        win = stream.tick()
+        if win is not None and win.workers >= 2:
+            windows = win
             if verbose:
                 ws = " ".join(f"{v:.2f}" for v in windows.vet)
-                print(f"[serve] window vets: {ws}")
+                st = stream.stats
+                print(f"[serve] window vets: {ws} "
+                      f"({st.vetted} vetted / {st.reused} reused rows over "
+                      f"{st.ticks} ticks)")
     tps = batch * gen_len / wall
     if verbose:
         print(f"[serve] {batch}x{gen_len} tokens in {wall:.2f}s = {tps:.1f} tok/s")

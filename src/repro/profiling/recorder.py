@@ -67,14 +67,20 @@ class RecordProfiler:
         """Raw per-record seconds."""
         return np.asarray(self._raw_ns, dtype=np.float64) * 1e-9
 
-    def unit_times(self) -> np.ndarray:
+    def unit_times(self, start: int = 0) -> np.ndarray:
         """Per-unit seconds: consecutive groups of ``unit`` records summed
-        (the paper's cost/accuracy balance). Trailing partial unit dropped."""
-        raw = self.record_times()
-        m = (raw.size // self.unit) * self.unit
-        if m == 0:
+        (the paper's cost/accuracy balance). Trailing partial unit dropped.
+
+        ``start`` skips the first ``start`` units, touching only the newer
+        records — O(new units), so a live consumer polling for freshly
+        completed units inside a hot loop pays for the delta, not the run.
+        """
+        m = (len(self._raw_ns) // self.unit) * self.unit
+        lo = int(start) * self.unit
+        if lo >= m:
             return np.zeros((0,), np.float64)
-        return raw[:m].reshape(-1, self.unit).sum(axis=1)
+        raw = np.asarray(self._raw_ns[lo:m], dtype=np.float64) * 1e-9
+        return raw.reshape(-1, self.unit).sum(axis=1)
 
     def total(self) -> float:
         return float(self.record_times().sum())

@@ -10,12 +10,14 @@ per-worker record profiles and emits concurrency / straggler decisions:
   * one worker's vet an outlier   -> straggler: flag for re-shard/eviction
     (KS test against the pooled population confirms it is not noise).
 
-Estimation routes through a ``repro.engine.VetEngine``: ``decide()`` vets
-all workers in one batched call (grouped by profile length when buffers fill
-unevenly) instead of a per-worker Python loop, and that call is memoized in
-the engine's result cache — a control loop that re-``decide()``s between feeds
-(dashboard ticks, idle polls) over unchanged buffers pays a buffer hash, not
-a compiled batch.
+Estimation routes through per-worker ``repro.engine.VetStream``s: ``feed``
+appends chunks into a worker's ring buffer in O(chunk) and ``decide()`` ticks
+each stream, which dispatches only the windows that became complete since the
+last decision — workers that received no records between decisions reuse
+their previous rows outright (no re-gather, no buffer re-hash), so an idle
+poll pays nothing per quiet worker.  Workers still warming up (fewer than a
+full window of records) are vetted over their resident buffers in one
+batched, memoized ``vet_many`` call.
 """
 
 from __future__ import annotations
@@ -26,7 +28,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from ..core import ks_2samp
-from ..engine import VetEngine, default_engine
+from ..engine import VetEngine, VetStream, default_engine
 
 __all__ = ["SchedulerDecision", "VetController"]
 
@@ -70,35 +72,67 @@ class VetController:
         self.straggler_pvalue = straggler_pvalue
         self.straggler_ratio = straggler_ratio
         self.engine = engine if engine is not None else default_engine("jax")
-        self._buffers: Dict[int, List[float]] = {i: [] for i in range(n_workers)}
+        self._streams: Dict[int, VetStream] = {
+            i: self._make_stream() for i in range(n_workers)
+        }
+
+    def _make_stream(self) -> VetStream:
+        # Half-window stride: a worker's vet refreshes every window/2 records;
+        # 4x capacity bounds the per-feed sub-chunks and keeps the latest full
+        # window resident for the KS straggler test.
+        return VetStream(self.engine, window=self.window,
+                         stride=max(1, self.window // 2),
+                         capacity=4 * self.window)
 
     def feed(self, worker_id: int, record_times: Sequence[float]) -> None:
-        buf = self._buffers.setdefault(worker_id, [])
-        buf.extend(float(t) for t in record_times)
-        if len(buf) > self.window:
-            del buf[: len(buf) - self.window]
+        # O(chunk) ingest: the stream only ticks mid-feed if overrun
+        # protection forces it; estimation otherwise waits for decide().
+        stream = self._streams.setdefault(worker_id, self._make_stream())
+        stream.feed(np.asarray(record_times, dtype=np.float64).ravel())
 
     def ready(self) -> bool:
-        return all(len(b) >= 32 for b in self._buffers.values() if b is not None)
+        return all(s.total_records >= 32 for s in self._streams.values())
 
     def decide(self) -> SchedulerDecision:
-        ids = [i for i, b in self._buffers.items() if len(b) >= 32]
+        ids = [i for i, s in self._streams.items() if s.total_records >= 32]
         if not ids:
             return SchedulerDecision(self.n_workers, reason="insufficient data")
-        profiles = {i: np.asarray(self._buffers[i]) for i in ids}
+        # Buffer copies are gathered lazily: an idle poll (no new windows, no
+        # outlier candidates) never materializes a single profile.
+        profiles: Dict[int, np.ndarray] = {}
 
-        # One batched engine call vets every worker (grouped by length).
-        batch = self.engine.vet_many([profiles[i] for i in ids])
-        vj = batch.vet_job
-        vets = {i: float(v) for i, v in zip(ids, batch.vet)}
+        def profile(i: int) -> np.ndarray:
+            if i not in profiles:
+                profiles[i] = self._streams[i].latest(self.window)
+            return profiles[i]
+
+        # Tick each worker's stream: only workers that completed new windows
+        # since the last decision dispatch any estimation work.  Workers still
+        # short of their first full window are vetted over their resident
+        # buffers in one batched vet_many (grouped by length, memoized — an
+        # unchanged warmup fleet is a single cache hit).
+        vets: Dict[int, float] = {}
+        warmup: List[int] = []
+        for i in ids:
+            res = self._streams[i].tick()
+            if res is not None:
+                vets[i] = float(res.vet[-1])
+            else:
+                warmup.append(i)
+        if warmup:
+            batch = self.engine.vet_many([profile(i) for i in warmup])
+            vets.update((i, float(v)) for i, v in zip(warmup, batch.vet))
+        vj = float(np.mean(list(vets.values())))
 
         # --- straggler detection: per-worker vet outliers confirmed by KS ---
         med = float(np.median(list(vets.values())))
         stragglers = []
-        pooled = np.concatenate(list(profiles.values()))
-        for i, v in vets.items():
-            if v > self.straggler_ratio * med and len(profiles) > 2:
-                ks = ks_2samp(profiles[i], pooled)
+        candidates = [i for i, v in vets.items()
+                      if v > self.straggler_ratio * med] if len(ids) > 2 else []
+        if candidates:
+            pooled = np.concatenate([profile(i) for i in ids])
+            for i in candidates:
+                ks = ks_2samp(profile(i), pooled)
                 if ks.pvalue < self.straggler_pvalue:
                     stragglers.append(i)
 

@@ -1,0 +1,127 @@
+"""Schema guard for ``benchmarks/results/*.json``.
+
+The result files are committed artifacts that downstream tooling (roofline
+injection, README tables, regression triage) reads by key.  A stale file from
+an older benchmark revision — or a hand-edited one — used to fail silently at
+consumption time; this suite fails it fast in tier-1 instead: every results
+file present must match the schema of the benchmark that claims to have
+written it, and files no benchmark owns are flagged.
+"""
+
+import json
+import math
+import os
+
+import pytest
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), os.pardir,
+                           "benchmarks", "results")
+
+# Required top-level keys per results file (subset check: benchmarks may add
+# keys freely, but dropping one of these means the file predates the current
+# benchmark code and must be regenerated).
+SCHEMAS = {
+    "fig6_ks": {"d", "p", "mean_a", "mean_b"},
+    "fig8_distribution": {"base85_cv", "bucket_sums", "top1pct_share",
+                          "windowed_vet_max", "windowed_vet_p50"},
+    "fig13_io": {"ei_fast", "ei_slow", "vet_fast", "vet_slow"},
+    "fig14_correlation": {"pearson", "times", "vets"},
+    "table2_slots": {"ei_drift", "pr_growth", "table"},
+    "vet_engine": {"workers", "window", "numpy", "jax", "pallas",
+                   "jax_speedup_vs_numpy", "windowed", "streaming"},
+    "kernels_bench": {"changepoint", "flash", "ssd", "vet_engine",
+                      "vet_engine_windowed", "vet_engine_streaming"},
+    "fig1_gap": None,  # free-form payloads: presence + valid JSON only
+    "fig3_spill": None,
+    "fig9_tail": None,
+    "roofline": None,
+    "table3_tuned": None,
+}
+
+# Per-backend required keys inside vet_engine's sections.
+BACKENDS = ("numpy", "jax", "pallas")
+WINDOWED_KEYS = {"n_records", "window", "stride", "num_windows",
+                 "cached_tick_us", "batched_speedup_vs_scalar_loop"}
+STREAMING_KEYS = {"n_records", "window", "stride", "chunk", "n_ticks",
+                  "num_windows", "stream_speedup_vs_regather"}
+
+
+def result_files():
+    if not os.path.isdir(RESULTS_DIR):
+        return []
+    return sorted(f for f in os.listdir(RESULTS_DIR) if f.endswith(".json"))
+
+
+def load(name):
+    with open(os.path.join(RESULTS_DIR, f"{name}.json")) as f:
+        return json.load(f)
+
+
+def test_results_dir_is_not_empty():
+    assert result_files(), "no benchmark results committed"
+
+
+@pytest.mark.parametrize("fname", result_files())
+def test_every_results_file_is_owned_and_parseable(fname):
+    stem = fname[:-len(".json")]
+    assert stem in SCHEMAS, (
+        f"benchmarks/results/{fname} has no schema — if a benchmark writes "
+        f"it, register its required keys in {__name__}.SCHEMAS")
+    payload = load(stem)
+    assert isinstance(payload, dict) and payload, f"{fname} is empty"
+
+
+@pytest.mark.parametrize("stem", sorted(k for k, v in SCHEMAS.items()
+                                        if v is not None))
+def test_required_keys_present(stem):
+    path = os.path.join(RESULTS_DIR, f"{stem}.json")
+    if not os.path.exists(path):
+        pytest.skip(f"{stem}.json not generated on this machine")
+    missing = SCHEMAS[stem] - set(load(stem))
+    assert not missing, (
+        f"{stem}.json is stale: missing {sorted(missing)} — rerun "
+        f"`python -m benchmarks.run --only {stem}`")
+
+
+def vet_engine_payload():
+    path = os.path.join(RESULTS_DIR, "vet_engine.json")
+    if not os.path.exists(path):
+        pytest.skip("vet_engine.json not generated on this machine")
+    return load("vet_engine")
+
+
+def test_vet_engine_backend_sections_have_timings():
+    payload = vet_engine_payload()
+    for section in (payload, payload["windowed"]):
+        for b in BACKENDS:
+            assert b in section, f"backend {b} missing"
+            us = section[b]["us_per_call"]
+            assert isinstance(us, (int, float)) and math.isfinite(us) and us > 0
+
+    streaming = payload["streaming"]
+    for b in BACKENDS:
+        st = streaming[b]
+        for key in ("stream_tick_us", "regather_tick_us", "tick_speedup"):
+            assert math.isfinite(st[key]) and st[key] > 0
+
+
+def test_vet_engine_windowed_and_streaming_sections_complete():
+    payload = vet_engine_payload()
+    assert WINDOWED_KEYS <= set(payload["windowed"]), (
+        "windowed section stale: rerun `python -m benchmarks.run "
+        "--only vet_engine`")
+    assert STREAMING_KEYS <= set(payload["streaming"]), (
+        "streaming section stale: rerun `python -m benchmarks.run "
+        "--only vet_engine`")
+
+
+def test_vet_engine_streaming_tick_is_incremental():
+    """Sanity floor on the committed artifact: the incremental tick does
+    strictly less work than a full re-gather (it vets ~1/30th of the
+    windows at the committed shape), so even a heavily loaded benchmark
+    machine must clear 2x.  The acceptance-scale number (>= 5x; 12-20x on
+    an idle container) lives in the artifact itself — this guard only
+    catches a streaming path that silently degenerated into a re-gather,
+    without turning timing noise into tier-1 flakes."""
+    payload = vet_engine_payload()
+    assert payload["streaming"]["stream_speedup_vs_regather"] >= 2.0

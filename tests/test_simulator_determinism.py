@@ -1,0 +1,96 @@
+"""Seeded-determinism regression tests for ``repro.profiling.simulator``.
+
+Every differential suite in this repo (engine backends, windowed vetting,
+streaming ticks, benchmark smoke tests) builds its ground-truth profiles from
+``simulate_records``/``simulate_job`` with fixed seeds and silently assumes
+the draws are bitwise-stable.  Nothing pinned that until now: a refactor that
+reorders the RNG consumption (or a silent change to the profile's identities)
+would shift every oracle at once and mask real regressions.  These tests make
+the assumption explicit:
+
+- same seed => bitwise-identical profiles, call after call and across
+  interleavings;
+- a golden content hash pins the exact draw sequence (NumPy guarantees
+  ``default_rng`` stream stability for a fixed bit generator, so this only
+  moves if *our* simulator changes what it asks the RNG for);
+- the ``SimProfile`` identities hold exactly: ``times == ideal + overhead``,
+  ``true_ei == ideal.sum()``, ``true_oc == overhead.sum()``, and ``true_vet``
+  is their ratio.
+"""
+
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.profiling import SimProfile, simulate_job, simulate_records
+
+
+def content_hash(a: np.ndarray) -> str:
+    return hashlib.blake2b(np.ascontiguousarray(a).tobytes(),
+                           digest_size=16).hexdigest()
+
+
+class TestSimulateRecordsDeterminism:
+    @pytest.mark.parametrize("seed", (0, 3, 1234))
+    def test_same_seed_is_bitwise_stable(self, seed):
+        a = simulate_records(500, seed=seed)
+        b = simulate_records(500, seed=seed)
+        np.testing.assert_array_equal(a.times, b.times)
+        np.testing.assert_array_equal(a.ideal, b.ideal)
+        np.testing.assert_array_equal(a.overhead, b.overhead)
+        assert a.true_ei == b.true_ei and a.true_oc == b.true_oc
+
+    def test_stability_across_interleaved_calls(self):
+        """Module-level RNG state must not leak between calls."""
+        a = simulate_records(200, seed=5)
+        simulate_records(999, seed=17)  # unrelated draw in between
+        b = simulate_records(200, seed=5)
+        np.testing.assert_array_equal(a.times, b.times)
+
+    def test_golden_hash_pins_the_draw_sequence(self):
+        """The exact bytes of the seed-0 profile, pinned.  If this moves, the
+        simulator's RNG consumption changed and every differential oracle in
+        the repo moved with it — bump deliberately, never incidentally."""
+        p = simulate_records(256, seed=0)
+        assert content_hash(p.times) == "bc4c4806fb945c8b5823f6a152d304f3"
+        assert content_hash(p.ideal) == "615e083c5071d8f3ac7fa5cb171d0316"
+
+    def test_different_seeds_differ(self):
+        a = simulate_records(300, seed=0)
+        b = simulate_records(300, seed=1)
+        assert not np.array_equal(a.times, b.times)
+
+    def test_profile_identities_exact(self):
+        p = simulate_records(400, seed=7)
+        assert isinstance(p, SimProfile)
+        np.testing.assert_array_equal(p.times, p.ideal + p.overhead)
+        assert p.true_ei == float(p.ideal.sum())
+        assert p.true_oc == float(p.overhead.sum())
+        assert p.true_vet == (p.true_ei + p.true_oc) / p.true_ei
+        assert p.true_vet >= 1.0
+        assert np.all(p.times > 0) and np.all(p.overhead >= 0)
+
+
+class TestSimulateJobDeterminism:
+    def test_same_seed_job_is_bitwise_stable(self):
+        a = simulate_job(3, 400, utilization_factor=2.0, seed=2)
+        b = simulate_job(3, 400, utilization_factor=2.0, seed=2)
+        assert len(a) == len(b) == 3
+        for pa, pb in zip(a, b):
+            np.testing.assert_array_equal(pa.times, pb.times)
+
+    def test_tasks_within_a_job_are_distinct_draws(self):
+        job = simulate_job(3, 400, seed=4)
+        assert not np.array_equal(job[0].times, job[1].times)
+        assert not np.array_equal(job[1].times, job[2].times)
+
+    def test_true_vet_consistent_and_utilization_scales_overhead(self):
+        """The Table 2 mechanism, deterministically: a higher utilization
+        factor inflates only the overhead channel (ideal unchanged)."""
+        lo = simulate_job(2, 2000, utilization_factor=1.0, seed=9)
+        hi = simulate_job(2, 2000, utilization_factor=4.0, seed=9)
+        for p_lo, p_hi in zip(lo, hi):
+            assert p_hi.true_oc > p_lo.true_oc
+            assert p_hi.true_vet > p_lo.true_vet
+            assert p_hi.true_vet >= 1.0

@@ -1,0 +1,429 @@
+"""Differential suite for the streaming vet path (``repro.engine.stream``).
+
+The contract under test: every ``VetStream.tick()`` result equals the batch
+oracle — ``vet_sliding`` over the same logical prefix of the stream — no
+matter how the stream was chunked into appends.  Because window ``k`` depends
+only on its own records, the oracle over any prefix is a row-prefix of the
+oracle over the full stream, so each case computes the full-stream oracle
+once and checks every tick against its leading rows: bitwise for the numpy
+backend (the stream's incremental dispatch runs the very same scalar loop on
+the very same float64 rows), 1e-5 for jax/pallas (their standing differential
+contract vs the numpy oracle).
+
+Also locks the invalidation story (amend / blanket invalidate / engine-level
+``invalidate(buffer)``: a mutated buffer can never serve a stale hit), the
+ring-wraparound and overrun edge cases, and the ``OnlineVet`` rewrite
+(chunked and record-at-a-time feeds emit identical snapshot lists).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.online import OnlineVet
+from repro.engine import BACKENDS, StreamStats, VetEngine, VetStream
+from repro.profiling import simulate_records
+
+JITTED_BACKENDS = ("jax", "pallas")
+
+
+def stream_times(n=320, seed=0):
+    return simulate_records(n, seed=seed).times
+
+
+def oracle_for(times, window, stride):
+    """Full-stream batch oracle (numpy backend == per-window scalar loop)."""
+    return VetEngine("numpy", buckets=64).vet_sliding(times, window=window,
+                                                      stride=stride)
+
+
+def drive(stream, times, chunk):
+    """Append chunk-by-chunk, tick after every append; yield (tick, result)."""
+    for lo in range(0, times.size, chunk):
+        stream.append(times[lo:lo + chunk])
+        yield stream.complete_windows, stream.tick()
+
+
+def assert_rows_equal(res, oracle, k, *, bitwise):
+    """res must equal the first k oracle rows (field by field)."""
+    assert res.workers == k
+    if bitwise:
+        for name in ("vet", "ei", "oc", "pr"):
+            np.testing.assert_array_equal(getattr(res, name),
+                                          getattr(oracle, name)[:k])
+    else:
+        for name in ("vet", "ei", "oc", "pr"):
+            np.testing.assert_allclose(getattr(res, name),
+                                       getattr(oracle, name)[:k], rtol=1e-5,
+                                       atol=1e-9)
+    np.testing.assert_array_equal(res.t, oracle.t[:k])
+    np.testing.assert_array_equal(res.n, oracle.n[:k])
+
+
+# ---------------------------------------------------------- differential
+class TestStreamDifferential:
+    WINDOW, STRIDE = 64, 16
+
+    @pytest.mark.parametrize("chunk", (1, 7, 64, 197))
+    def test_numpy_every_tick_bitwise_equals_batch_oracle(self, chunk):
+        """Chunk sizes 1 / 7 / window-sized / multi-window: bitwise."""
+        times = stream_times(320, seed=0)
+        oracle = oracle_for(times, self.WINDOW, self.STRIDE)
+        st = VetStream(VetEngine("numpy", buckets=64), window=self.WINDOW,
+                       stride=self.STRIDE, capacity=512)
+        ticked = 0
+        for k, res in drive(st, times, chunk):
+            if k == 0:
+                assert res is None
+                continue
+            assert_rows_equal(res, oracle, k, bitwise=True)
+            ticked += 1
+        assert ticked > 0 and st.complete_windows == oracle.workers
+
+    @pytest.mark.parametrize("backend", JITTED_BACKENDS)
+    @pytest.mark.parametrize("chunk", (7, 64, 197))
+    def test_jitted_every_tick_matches_oracle_1e5(self, backend, chunk):
+        times = stream_times(320, seed=3)
+        oracle = oracle_for(times, self.WINDOW, self.STRIDE)
+        st = VetStream(VetEngine(backend, buckets=64), window=self.WINDOW,
+                       stride=self.STRIDE, capacity=512)
+        for k, res in drive(st, times, chunk):
+            if k:
+                assert_rows_equal(res, oracle, k, bitwise=False)
+
+    def test_stream_equals_vet_sliding_same_engine_exactly(self):
+        """Same engine, same backend: stream rows == vet_sliding rows."""
+        times = stream_times(300, seed=5)
+        eng = VetEngine("jax", buckets=64)
+        st = VetStream(eng, window=64, stride=32, capacity=512)
+        st.append(times)
+        res = st.tick()
+        batch = eng.vet_sliding(times, window=64, stride=32)
+        np.testing.assert_array_equal(res.vet, batch.vet)
+        np.testing.assert_array_equal(res.t, batch.t)
+
+    def test_final_result_independent_of_chunking(self):
+        """1-record and multi-window chunkings end bitwise identical."""
+        times = stream_times(256, seed=8)
+        finals = []
+        for chunk in (1, 256):
+            st = VetStream(VetEngine("numpy", buckets=64), window=64,
+                           stride=16, capacity=256)
+            for _, res in drive(st, times, chunk):
+                final = res
+            finals.append(final)
+        for a, b in zip(finals[0], finals[1]):
+            np.testing.assert_array_equal(a, b)
+
+    def test_tick_is_incremental_not_recomputed(self):
+        """Rows are dispatched once: vetted == windows, reuse grows."""
+        times = stream_times(320, seed=1)
+        st = VetStream(VetEngine("numpy", buckets=64), window=64, stride=16,
+                       capacity=512)
+        for _ in drive(st, times, 32):
+            pass
+        stats = st.stats
+        assert isinstance(stats, StreamStats)
+        assert stats.windows == (320 - 64) // 16 + 1
+        assert stats.vetted == stats.windows  # each window vetted exactly once
+        assert stats.reused > 0
+
+
+# ------------------------------------------------------- ring wraparound
+class TestRingWraparound:
+    def test_small_capacity_many_wraps_matches_oracle(self):
+        """capacity=64 over a 400-record stream (several full wraps)."""
+        times = stream_times(400, seed=2)
+        oracle = oracle_for(times, 32, 8)
+        st = VetStream(VetEngine("numpy", buckets=64), window=32, stride=8,
+                       capacity=64)
+        for k, res in drive(st, times, 16):
+            if k:
+                assert_rows_equal(res, oracle, k, bitwise=True)
+
+    def test_capacity_equals_window_tumbling(self):
+        """The tightest legal ring: capacity == window == stride == chunk."""
+        times = stream_times(256, seed=4)
+        oracle = oracle_for(times, 64, 64)
+        st = VetStream(VetEngine("numpy", buckets=64), window=64, stride=64,
+                       capacity=64)
+        for k, res in drive(st, times, 64):
+            assert_rows_equal(res, oracle, k, bitwise=True)
+
+    def test_chunk_larger_than_capacity_keeps_tail(self):
+        """An oversized append retains the newest capacity records."""
+        times = stream_times(300, seed=6)
+        st = VetStream(VetEngine("numpy", buckets=64), window=64, stride=64,
+                       capacity=128)
+        st.append(times)  # 300 > 128: records 172..299 resident
+        np.testing.assert_array_equal(st.resident(), times[-128:])
+        assert st.total_records == 300
+
+    def test_overrun_raises_informative_error(self):
+        """Appends that outrun the ring must raise, not skip windows."""
+        st = VetStream(VetEngine("numpy", buckets=64), window=64, stride=16,
+                       capacity=64)
+        st.append(stream_times(200, seed=7))
+        with pytest.raises(ValueError, match="overran the ring"):
+            st.tick()
+
+    def test_latest_and_resident_views(self):
+        times = stream_times(100, seed=9)
+        st = VetStream(VetEngine("numpy", buckets=64), window=32, capacity=64)
+        st.append(times)
+        np.testing.assert_array_equal(st.resident(), times[-64:])
+        np.testing.assert_array_equal(st.latest(10), times[-10:])
+        np.testing.assert_array_equal(st.latest(1000), times[-64:])
+
+
+# --------------------------------------------------------- invalidation
+class TestInvalidation:
+    def test_amend_re_vets_affected_windows_to_mutated_oracle(self):
+        """mutate -> no stale rows: post-amend ticks equal the oracle over
+        the mutated stream, and only the affected suffix is re-dispatched."""
+        times = stream_times(320, seed=0)
+        st = VetStream(VetEngine("numpy", buckets=64), window=64, stride=16,
+                       capacity=512)
+        st.append(times)
+        st.tick()
+        vetted_before = st.stats.vetted
+        mutated = times.copy()
+        mutated[300] *= 40.0
+        st.amend(300, mutated[300])
+        res = st.tick()
+        oracle = oracle_for(mutated, 64, 16)
+        assert_rows_equal(res, oracle, oracle.workers, bitwise=True)
+        # windows before the first one covering record 300 were NOT re-vetted
+        first_affected = (300 - 64) // 16 + 1
+        assert st.stats.vetted - vetted_before == oracle.workers - first_affected
+
+    def test_amend_through_cached_engine_never_serves_stale_rows(self):
+        """The epoch-tagged fingerprint: same engine cache, pre- and
+        post-mutation ticks must differ where the oracle differs."""
+        times = stream_times(128, seed=3)
+        eng = VetEngine("jax", buckets=64)  # cache enabled
+        st = VetStream(eng, window=64, stride=64, capacity=256)
+        st.append(times)
+        r1 = st.tick()
+        st.amend(100, np.asarray([times[100] * 80.0]))
+        r2 = st.tick()
+        assert r2 is not r1
+        assert r2.vet[1] != r1.vet[1]  # window [64,128) saw the mutation
+        assert r2.vet[0] == r1.vet[0]  # window [0,64) did not
+
+    def test_amend_bounds_checked(self):
+        st = VetStream(VetEngine("numpy", buckets=64), window=32, capacity=64)
+        st.append(stream_times(200, seed=1))
+        with pytest.raises(ValueError, match="outside the appended stream"):
+            st.amend(500, [1.0])
+        with pytest.raises(ValueError, match="resident"):
+            st.amend(10, [1.0])  # record 10 already evicted (only 136.. live)
+
+    def test_blanket_invalidate_re_vets_resident_windows(self):
+        times = stream_times(256, seed=5)
+        st = VetStream(VetEngine("numpy", buckets=64), window=64, stride=32,
+                       capacity=256)
+        st.append(times)
+        r1 = st.tick()
+        dropped = st.invalidate()
+        assert dropped == r1.workers  # everything resident -> all re-vetted
+        r2 = st.tick()
+        assert r2 is not r1
+        for a, b in zip(r1, r2):
+            np.testing.assert_array_equal(a, b)  # content unchanged => equal
+        assert st.stats.epoch == 1
+        assert st.stats.vetted == 2 * r1.workers
+
+    def test_engine_invalidate_evicts_matching_entries(self):
+        times = stream_times(256, seed=6)
+        other = stream_times(256, seed=7)
+        eng = VetEngine("jax", buckets=64)
+        eng.vet_sliding(times, window=64, stride=64)
+        eng.vet_sliding(other, window=64, stride=64)
+        eng.vet_many([times, other])
+        assert eng.cache_info().size == 3
+        # evicts the entries computed from `times`, including the
+        # multi-buffer vet_many entry; `other`'s own entry survives
+        assert eng.invalidate(times) == 2
+        assert eng.cache_info().size == 1
+        assert eng.invalidate(np.ones(10)) == 0
+
+    def test_engine_invalidate_then_recompute_is_a_miss(self):
+        times = stream_times(128, seed=8)
+        eng = VetEngine("jax", buckets=64)
+        eng.vet_batch(times[None, :])
+        misses = eng.cache_info().misses
+        eng.invalidate(times)
+        eng.vet_batch(times[None, :])
+        assert eng.cache_info().misses == misses + 1
+
+
+# ------------------------------------------------------------- API edges
+class TestStreamAPI:
+    def test_tick_before_first_window_returns_none(self):
+        st = VetStream(VetEngine("numpy", buckets=64), window=64)
+        st.append(stream_times(32, seed=0))
+        assert st.tick() is None
+        assert st.complete_windows == 0
+
+    def test_noop_tick_returns_same_object_without_dispatch(self):
+        eng = VetEngine("numpy", buckets=64)
+        st = VetStream(eng, window=64, stride=64, capacity=256)
+        st.append(stream_times(128, seed=1))
+        r1 = st.tick()
+        vetted = st.stats.vetted
+        r2 = st.tick()
+        assert r2 is r1
+        assert st.stats.vetted == vetted
+
+    def test_results_are_frozen(self):
+        st = VetStream(VetEngine("numpy", buckets=64), window=64, stride=64)
+        st.append(stream_times(128, seed=2))
+        res = st.tick()
+        with pytest.raises(ValueError):
+            res.vet[0] = 0.0
+
+    def test_earlier_tick_results_are_stable_snapshots(self):
+        """A result handed out must not change as the stream grows."""
+        times = stream_times(256, seed=3)
+        st = VetStream(VetEngine("numpy", buckets=64), window=64, stride=32,
+                       capacity=256)
+        st.append(times[:128])
+        r1 = st.tick()
+        saved = r1.vet.copy()
+        st.append(times[128:])
+        st.tick()
+        np.testing.assert_array_equal(r1.vet, saved)
+
+    def test_rolling_fingerprint_changes_on_append_and_amend(self):
+        st = VetStream(VetEngine("numpy", buckets=64), window=32)
+        f0 = st.fingerprint
+        st.append(stream_times(64, seed=4))
+        f1 = st.fingerprint
+        st.amend(60, [1.0])
+        f2 = st.fingerprint
+        assert len({f0, f1, f2}) == 3
+
+    def test_constructor_contract(self):
+        eng = VetEngine("numpy", buckets=64)
+        with pytest.raises(ValueError, match="window"):
+            VetStream(eng, window=1)
+        with pytest.raises(ValueError, match="stride"):
+            VetStream(eng, window=8, stride=0)
+        with pytest.raises(ValueError, match="capacity"):
+            VetStream(eng, window=8, capacity=4)
+        with pytest.raises(ValueError, match="1-D"):
+            VetStream(eng, window=8).append(np.ones((2, 8)))
+
+    def test_empty_append_is_noop(self):
+        st = VetStream(VetEngine("numpy", buckets=64), window=32)
+        f0 = st.fingerprint
+        assert st.append([]) == 0
+        assert st.total_records == 0 and st.fingerprint == f0
+
+    def test_feed_self_manages_the_ring_budget(self):
+        """One feed() far beyond capacity never overruns and stays oracle
+        equal — the stream ticks itself exactly when forced."""
+        times = stream_times(400, seed=10)
+        oracle = oracle_for(times, 32, 8)
+        st = VetStream(VetEngine("numpy", buckets=64), window=32, stride=8,
+                       capacity=64)
+        st.feed(times)  # 400 records through a 64-slot ring, one call
+        res = st.tick()
+        assert_rows_equal(res, oracle, oracle.workers, bitwise=True)
+        assert st.stats.vetted == oracle.workers  # each window vetted once
+
+    def test_feed_without_pressure_does_not_dispatch(self):
+        """feed() is pure ingest while the ring has headroom."""
+        st = VetStream(VetEngine("numpy", buckets=64), window=32, stride=8,
+                       capacity=256)
+        st.feed(stream_times(128, seed=11))
+        assert st.stats.vetted == 0  # no tick happened during feed
+        assert st.tick().workers == (128 - 32) // 8 + 1
+
+
+# ----------------------------------------------- OnlineVet stream rewrite
+class TestOnlineVetStreaming:
+    def make_times(self, n=640, seed=0):
+        rng = np.random.default_rng(seed)
+        t = 1e-3 * (1 + 0.05 * rng.random(n))
+        t[::7] += rng.pareto(1.3, t[::7].shape) * 5e-3
+        return t
+
+    def test_chunked_and_record_at_a_time_feeds_identical_numpy(self):
+        """The satellite contract, bitwise on the numpy backend."""
+        times = self.make_times()
+        snaps = {}
+        for label, chunk in (("chunked", 160), ("scalar", 1)):
+            ov = OnlineVet(window=64, engine=VetEngine("numpy", buckets=64))
+            out = []
+            for lo in range(0, times.size, chunk):
+                out.extend(ov.feed(times[lo:lo + chunk]))
+            snaps[label] = out
+        assert len(snaps["chunked"]) == len(snaps["scalar"]) > 0
+        assert snaps["chunked"] == snaps["scalar"]  # NamedTuple equality
+
+    def test_chunked_and_whole_stream_feeds_identical_jax(self):
+        times = self.make_times(seed=1)
+        ov_a = OnlineVet(window=64, engine=VetEngine("jax", buckets=64))
+        ov_b = OnlineVet(window=64, engine=VetEngine("jax", buckets=64))
+        a = ov_a.feed(times)
+        b = []
+        for lo in range(0, times.size, 48):
+            b.extend(ov_b.feed(times[lo:lo + 48]))
+        assert len(a) == len(b)
+        for sa, sb in zip(a, b):
+            np.testing.assert_allclose(sa.vet, sb.vet, rtol=1e-6)
+            np.testing.assert_allclose(sa.smoothed_vet, sb.smoothed_vet,
+                                       rtol=1e-6)
+
+    def test_feed_is_vectorized_no_per_record_estimates(self):
+        """One big feed dispatches batches, not one call per record: the
+        backing stream vets every window exactly once."""
+        ov = OnlineVet(window=64, engine=VetEngine("numpy", buckets=64))
+        snaps = ov.feed(self.make_times(640, seed=2))
+        stats = ov.stream.stats
+        assert stats.vetted == len(snaps) == stats.windows
+
+    def test_huge_feed_does_not_overrun_ring(self):
+        """A feed far beyond ring capacity still emits every snapshot."""
+        ov = OnlineVet(window=64, engine=VetEngine("numpy", buckets=64))
+        n = 64 * 40  # 10x the stream capacity
+        snaps = ov.feed(self.make_times(n, seed=3))
+        assert len(snaps) == (n - 64) // 32 + 1
+
+    def test_matches_pre_stream_window_convention(self):
+        """Snapshots still cover [k*w/2, k*w/2 + w): equal to vet_task on
+        those slices (the old deque semantics)."""
+        from repro.core import vet_task
+
+        times = self.make_times(256, seed=4)
+        ov = OnlineVet(window=128, engine=VetEngine("numpy", buckets=64))
+        snaps = ov.feed(times)
+        assert len(snaps) == 3  # completions at 128, 192, 256
+        for k, s in enumerate(snaps):
+            ref = vet_task(times[k * 64:k * 64 + 128], buckets=64)
+            np.testing.assert_allclose(s.vet, float(ref.vet), rtol=1e-12)
+
+    def test_2d_feed_rejected(self):
+        with pytest.raises(ValueError, match="1-D"):
+            OnlineVet(window=64,
+                      engine=VetEngine("numpy", buckets=64)).feed(np.ones((4, 4)))
+
+    def test_amend_refolds_corrected_windows_into_ema(self):
+        """stream.amend() on an already-emitted window must surface in the
+        next feed: the corrected rows re-fold, snapshots track the fix."""
+        times = self.make_times(256, seed=5)
+        ov = OnlineVet(window=128, engine=VetEngine("numpy", buckets=64))
+        ov.feed(times)
+        stale_vet = ov.snapshot.vet
+        # blow up a record inside the last emitted window [128, 256)
+        ov.stream.amend(200, [times[200] + 5.0])
+        snaps = ov.feed([])  # no new records: only the re-vetted rows emit
+        assert snaps, "corrected windows must re-emit"
+        assert ov.snapshot.vet != stale_vet
+        oracle = VetEngine("numpy", buckets=64)
+        fixed = times.copy()
+        fixed[200] += 5.0
+        np.testing.assert_allclose(
+            ov.snapshot.vet,
+            float(oracle.vet_one(fixed[128:256]).vet), rtol=1e-12)

@@ -245,6 +245,66 @@ class TestResultCache:
         assert eng.cache_info() == CacheInfo(0, 0, 0, 128)
 
 
+class TestCacheAccounting:
+    """hit/miss bookkeeping across interleaved entry points, and the frozen
+    contract on every cache-served result."""
+
+    def entry_points(self, eng, t):
+        """One call per public entry point, all over the same buffer."""
+        return {
+            "vet_batch": lambda: eng.vet_batch(t[None, :]),
+            "vet_many": lambda: eng.vet_many([t, t[:128]]),
+            "vet_sliding": lambda: eng.vet_sliding(t, window=64, stride=64),
+            "vet_windows": lambda: eng.vet_windows(t, [(0, 64), (64, 192)]),
+        }
+
+    def test_interleaved_entry_points_count_hits_and_misses(self):
+        t = stream(256, seed=0)
+        eng = VetEngine("numpy", buckets=64)
+        calls = self.entry_points(eng, t)
+        first = {name: fn() for name, fn in calls.items()}
+        # four distinct entry points over one buffer: four misses, no hits
+        assert eng.cache_info() == CacheInfo(hits=0, misses=4, size=4,
+                                             max_size=128)
+        for name, fn in calls.items():
+            assert fn() is first[name]  # every repeat is a stored-object hit
+        assert eng.cache_info() == CacheInfo(hits=4, misses=4, size=4,
+                                             max_size=128)
+
+    def test_vet_one_shares_the_vet_batch_entry(self):
+        """vet_one funnels through vet_batch's key: no duplicate entry."""
+        t = stream(64, seed=1)
+        eng = VetEngine("numpy", buckets=64)
+        eng.vet_batch(t[None, :])
+        r = eng.vet_one(t)
+        info = eng.cache_info()
+        assert info.hits == 1 and info.misses == 1 and info.size == 1
+        assert float(r.vet) == float(eng.vet_batch(t[None, :]).vet[0])
+
+    def test_param_variants_are_separate_entries_not_hits(self):
+        t = stream(256, seed=2)
+        eng = VetEngine("numpy", buckets=64)
+        eng.vet_sliding(t, window=64, stride=64)
+        eng.vet_sliding(t, window=64, stride=32)
+        eng.vet_sliding(t, window=128, stride=64)
+        assert eng.cache_info() == CacheInfo(hits=0, misses=3, size=3,
+                                             max_size=128)
+
+    @pytest.mark.parametrize("name", ("vet_batch", "vet_many", "vet_sliding",
+                                      "vet_windows"))
+    def test_every_entry_point_returns_frozen_arrays_on_hit(self, name):
+        t = stream(256, seed=3)
+        eng = VetEngine("numpy", buckets=64)
+        fn = self.entry_points(eng, t)[name]
+        fn()
+        hit = fn()
+        assert eng.cache_info().hits >= 1
+        for a in hit:
+            assert isinstance(a, np.ndarray) and not a.flags.writeable
+        with pytest.raises(ValueError):
+            hit.vet[0] = 0.0
+
+
 # ----------------------------------------------------------- error contract
 class TestWindowedErrors:
     """Informative ValueErrors up front — never a shape error inside jit."""
