@@ -1,0 +1,153 @@
+"""Fleet multiplexing: per-stream tick loop vs ``VetMux`` coalesced dispatch.
+
+The workload is the straggler-controller / fleet-dashboard shape: N live
+workers, each with its own ``VetStream``, every tick appends a chunk per
+worker and re-estimates.  The baseline is the pre-fleet path — tick every
+stream in a Python loop, one engine dispatch per stream — against the mux,
+which drains all N deltas and coalesces them into one shape-bucketed batched
+dispatch per tick.  Both paths compute identical rows (the differential
+contract in ``tests/test_fleet.py``); the contrast is pure dispatch count
+and wall clock, reported per backend at 256 workers plus a jax scaling point
+at 1024.
+
+A heterogeneous section replays the scenario bank's ``mixed_windows`` shape
+at fleet scale: the mux pays one dispatch per *distinct window length*
+(3 here) per tick, not one per stream.
+
+Engines run with the result cache disabled so every tick pays its real
+compute; dispatch counts come from ``VetEngine.dispatches`` and are exact,
+not timed (the >= 10x reduction floor pinned by
+``tests/test_benchmark_results_schema.py`` is deterministic).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.engine import BACKENDS, VetEngine, VetStream
+from repro.fleet import VetMux, build, play
+
+from .common import emit, save_json, time_fn
+
+
+def _fleet_times(workers: int, n_records: int, seed: int = 0):
+    from repro.profiling import simulate_records
+
+    return [simulate_records(n_records, seed=seed * 1000 + i).times
+            for i in range(workers)]
+
+
+def bench_fleet_tick(workers: int = 256, *, window: int = 64,
+                     stride: int = 32, chunk: int = 32, n_ticks: int = 4,
+                     backend: str = "jax", seed: int = 0) -> dict:
+    """One backend's loop-vs-mux contrast at a given fleet size.
+
+    Feeds are identical on both paths and excluded from the timed region —
+    the measured cost is the per-tick estimation sweep (the controller's
+    ``decide()`` hot path): N stream ticks vs one mux tick.
+    """
+    # A full window up front: the warmup tick below must complete (and so
+    # compile) the same per-tick delta shape the timed ticks replay —
+    # window records for the first window, then one stride-sized window
+    # per chunk per tick.
+    times = _fleet_times(workers, window + n_ticks * chunk, seed=seed)
+    cap = 4 * window
+
+    def tick_slice(i, k):
+        return times[i][window + (k - 1) * chunk:window + k * chunk]
+
+    # --- baseline: the pre-fleet per-stream tick loop -------------------
+    eng_loop = VetEngine(backend, buckets=64, cache_size=0)
+    streams = [VetStream(eng_loop, window=window, stride=stride, capacity=cap)
+               for _ in range(workers)]
+    for i, st in enumerate(streams):  # warmup: compile the delta shape
+        st.append(times[i][:window])
+        st.tick()
+    loop_s = 0.0
+    d0 = eng_loop.dispatches
+    for k in range(1, n_ticks + 1):
+        for i, st in enumerate(streams):
+            st.append(tick_slice(i, k))
+        t0 = time.perf_counter()
+        for st in streams:
+            st.tick()
+        loop_s += time.perf_counter() - t0
+    loop_dispatches = (eng_loop.dispatches - d0) / n_ticks
+    loop_us = loop_s / n_ticks * 1e6
+
+    # --- the mux: one coalesced dispatch per window-length bucket -------
+    eng_mux = VetEngine(backend, buckets=64, cache_size=0)
+    mux = VetMux(eng_mux)
+    for i in range(workers):
+        mux.register(i, window=window, stride=stride, capacity=cap)
+    for i in range(workers):
+        mux.feed(i, times[i][:window])
+    mux.tick()  # warmup: compile the coalesced pow2 batch shape
+    mux_s = 0.0
+    d0 = eng_mux.dispatches
+    for k in range(1, n_ticks + 1):
+        for i in range(workers):
+            mux.feed(i, tick_slice(i, k))
+        t0 = time.perf_counter()
+        mux.tick()
+        mux_s += time.perf_counter() - t0
+    mux_dispatches = (eng_mux.dispatches - d0) / n_ticks
+    mux_us = mux_s / n_ticks * 1e6
+
+    out = {
+        "workers": workers,
+        "loop_tick_us": loop_us,
+        "mux_tick_us": mux_us,
+        "tick_speedup": loop_us / mux_us,
+        "loop_dispatches_per_tick": loop_dispatches,
+        "mux_dispatches_per_tick": mux_dispatches,
+        "dispatch_reduction": loop_dispatches / mux_dispatches,
+    }
+    emit(f"fleet/{backend}_{workers}w", mux_us,
+         f"loop_us={loop_us:.1f};speedup={out['tick_speedup']:.1f}x;"
+         f"dispatches={loop_dispatches:.0f}->{mux_dispatches:.0f}")
+    return out
+
+
+def bench_mixed_windows(workers: int = 255, *, n_ticks: int = 4,
+                        backend: str = "jax", seed: int = 1) -> dict:
+    """Heterogeneous fleet: dispatches collapse to the window-length count."""
+    sc = build("mixed_windows", n_workers=workers, n_ticks=n_ticks, seed=seed)
+    n_lengths = len({s.window for s in sc.specs})
+    eng = VetEngine(backend, buckets=64, cache_size=0)
+    mux = VetMux(eng)
+    t0 = time.perf_counter()
+    ticks = play(sc, mux)
+    wall = time.perf_counter() - t0
+    dispatching = [t.dispatches for t in ticks if t.rows]
+    out = {
+        "workers": workers,
+        "window_lengths": n_lengths,
+        "n_ticks": n_ticks,
+        "max_dispatches_per_tick": max(dispatching),
+        "rows": mux.stats.rows,
+        "wall_s": wall,
+    }
+    emit(f"fleet/mixed_{backend}_{workers}w", wall / len(ticks) * 1e6,
+         f"buckets={out['max_dispatches_per_tick']};"
+         f"streams={workers};rows={out['rows']}")
+    return out
+
+
+def run():
+    out = {"window": 64, "stride": 32, "chunk": 32, "workers": 256}
+    for backend in BACKENDS:
+        out[backend] = bench_fleet_tick(
+            256, backend=backend, n_ticks=(2 if backend == "numpy" else 4))
+    # The schema floor reads the jax number (the production path); each
+    # backend section carries its own reduction too.
+    out["dispatch_reduction"] = out["jax"]["dispatch_reduction"]
+    out["scaling_1024"] = bench_fleet_tick(1024, backend="jax", n_ticks=2)
+    out["mixed_windows"] = bench_mixed_windows(255, backend="jax")
+    emit("fleet/summary_256w", 0.0,
+         f"dispatch_reduction={out['dispatch_reduction']:.0f}x;"
+         f"jax_speedup={out['jax']['tick_speedup']:.1f}x")
+    save_json("fleet", out)
+    return out

@@ -24,6 +24,7 @@ SUITES = [
     ("roofline", "Framework: roofline table from dry-run"),
     ("kernels_bench", "Framework: Pallas kernel micro-benchmarks"),
     ("vet_engine", "Framework: VetEngine backend comparison (numpy/jax/pallas)"),
+    ("fleet", "Framework: VetMux coalesced fleet ticks vs per-stream loop"),
 ]
 
 

@@ -1,8 +1,8 @@
 #!/usr/bin/env bash
-# Tier-1 CI: install test extras, run the streaming + windowed vetting
-# differential suites explicitly (with JUnit XML reports), then the full
-# pytest suite, then a fast VetEngine smoke benchmark (batch + windowed +
-# streaming sections: backend agreement, batched-vs-scalar speedup,
+# Tier-1 CI: install test extras, run the streaming + fleet + windowed
+# vetting differential suites explicitly (with JUnit XML reports), then the
+# full pytest suite, then a fast VetEngine smoke benchmark (batch + windowed
+# + streaming sections: backend agreement, batched-vs-scalar speedup,
 # cached-tick cost, incremental-tick-vs-regather speedup).
 #
 # Usage: scripts/ci.sh [extra pytest args...]
@@ -33,6 +33,17 @@ python -m pytest -q -x \
   tests/test_simulator_determinism.py \
   || streaming_status=$?
 
+# Fleet multiplexing next: the mux differential suite locks every coalesced
+# dispatch to the per-stream oracle across the scenario bank, and the smoke
+# suite is the fast (<= 64 workers, numpy) tier-1 path.
+echo "[ci] fleet vetting: mux differential + scheduler + smoke suites"
+fleet_status=0
+python -m pytest -q -x \
+  --junitxml="$REPORTS_DIR/fleet.xml" \
+  tests/test_fleet.py \
+  tests/test_fleet_smoke.py \
+  || fleet_status=$?
+
 # Windowed vetting next (same reasoning for the batched sliding/ragged path).
 echo "[ci] windowed vetting: differential + property + benchmark-smoke suites"
 windowed_status=0
@@ -52,6 +63,8 @@ python -m pytest -q \
   --junitxml="$REPORTS_DIR/tier1.xml" \
   --ignore=tests/test_vet_stream.py \
   --ignore=tests/test_simulator_determinism.py \
+  --ignore=tests/test_fleet.py \
+  --ignore=tests/test_fleet_smoke.py \
   --ignore=tests/test_vet_windows.py \
   --ignore=tests/test_vet_windows_properties.py \
   --ignore=tests/test_benchmarks_smoke.py \
@@ -64,6 +77,10 @@ python -m benchmarks.run --only vet_engine || smoke_status=$?
 if [ "$streaming_status" -ne 0 ]; then
   echo "[ci] FAIL: streaming vetting suites exited $streaming_status"
   exit "$streaming_status"
+fi
+if [ "$fleet_status" -ne 0 ]; then
+  echo "[ci] FAIL: fleet vetting suites exited $fleet_status"
+  exit "$fleet_status"
 fi
 if [ "$windowed_status" -ne 0 ]; then
   echo "[ci] FAIL: windowed vetting suites exited $windowed_status"

@@ -39,7 +39,10 @@ class OnlineVet:
     and folds into an EMA.  Live records occupy an O(window) ring; the
     backing stream additionally retains six scalars per completed window of
     result history (its prefix-oracle contract), which grows with stream
-    length — bounding it is a tracked ROADMAP follow-up.
+    length unless ``history=`` caps it — an estimator meant to live for the
+    whole deployment should pass a cap (the EMA itself only ever needs the
+    newest rows; evicted rows shift the stream's ``first_retained`` and the
+    fold accounts for the offset).
 
     ``engine`` is the backing ``VetEngine``; when omitted, a shared default
     (jax backend, ``buckets`` as given) is used.  With an explicit engine its
@@ -47,7 +50,8 @@ class OnlineVet:
     """
 
     def __init__(self, window: int = 512, alpha: float = 0.3,
-                 buckets: Optional[int] = 64, engine=None):
+                 buckets: Optional[int] = 64, engine=None,
+                 history: Optional[int] = None):
         if window < 64:
             raise ValueError("window must be >= 64")
         self.window = window
@@ -62,9 +66,18 @@ class OnlineVet:
 
         # Half-window stride = the refresh cadence; 4x capacity keeps the
         # sliding() drill-down view resident and bounds per-feed sub-chunks.
-        self._stream = VetStream(engine, window=window,
-                                 stride=max(1, window // 2),
-                                 capacity=4 * window)
+        stride = max(1, window // 2)
+        capacity = 4 * window
+        # The stream may not evict a row before feed() has folded it: one
+        # tick commits at most (capacity - window) // stride + 1 rows (every
+        # unvetted window is still ring-resident), and feed() folds after
+        # every tick, so clamping the stream cap to that geometric bound
+        # keeps any user history= exact (it is a small constant — memory
+        # stays O(window)).
+        if history is not None:
+            history = max(int(history), (capacity - window) // stride + 1)
+        self._stream = VetStream(engine, window=window, stride=stride,
+                                 capacity=capacity, history=history)
         self._emitted = 0  # windows already folded into the EMA
         self._smoothed: Optional[float] = None
         self._last: Optional[OnlineVetSnapshot] = None
@@ -80,23 +93,36 @@ class OnlineVet:
         feeds emit identical snapshot lists.
         """
         out: List[OnlineVetSnapshot] = []
-        # feed() sub-chunks internally so a huge append can never outrun the
-        # ring; one tick then yields every window this call completed.
-        self._stream.feed(times)
-        res = self._stream.tick()
-        if res is not None:
-            # Windows re-vetted via stream.amend()/invalidate() since the
-            # last feed re-fold from the first corrected row (the EMA is
-            # order-sensitive, so a correction perturbs rather than rewrites
-            # the smoothed history — but snapshots reflect corrected data).
-            rewound = self._stream.consume_rewind()
-            if rewound is not None:
-                self._emitted = min(self._emitted, rewound)
-            for k in range(self._emitted, res.workers):
-                out.append(self._fold(float(res.vet[k]), float(res.ei[k]),
-                                      float(res.pr[k])))
-            self._emitted = res.workers
+        # The stream sub-chunks by its ring budget; the pressure hook folds
+        # after *every* forced tick: with a bounded history a tick's commit
+        # evicts rows past the cap, so folding must never lag a tick or
+        # capped streams would skip snapshots on large chunks (the history
+        # clamp in __init__ holds exactly because of this pairing).
+        self._stream.feed(
+            times,
+            on_pressure=lambda: self._fold_new(self._stream.tick(), out))
+        self._fold_new(self._stream.tick(), out)
         return out
+
+    def _fold_new(self, res, out: List[OnlineVetSnapshot]) -> None:
+        """Fold every not-yet-emitted row of a tick result into the EMA."""
+        if res is None:
+            return
+        # Windows re-vetted via stream.amend()/invalidate() since the
+        # last feed re-fold from the first corrected row (the EMA is
+        # order-sensitive, so a correction perturbs rather than rewrites
+        # the smoothed history — but snapshots reflect corrected data).
+        rewound = self._stream.consume_rewind()
+        if rewound is not None:
+            self._emitted = min(self._emitted, rewound)
+        # With a bounded history, row j of the result is window base + j.
+        base = self._stream.first_retained
+        self._emitted = max(self._emitted, base)
+        for k in range(self._emitted, base + res.workers):
+            out.append(self._fold(float(res.vet[k - base]),
+                                  float(res.ei[k - base]),
+                                  float(res.pr[k - base])))
+        self._emitted = base + res.workers
 
     def _fold(self, vet: float, ei: float, pr: float) -> OnlineVetSnapshot:
         self._smoothed = (vet if self._smoothed is None

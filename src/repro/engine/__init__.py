@@ -66,12 +66,17 @@ unchanged window are served from the cache.
 Streaming (the live-consumer path — dashboards, controllers and autotuners
 that re-estimate on every tick of a growing stream):
 
-- ``VetStream(engine, window=, stride=, capacity=)`` — a fixed-capacity ring
-  buffer with O(chunk) ``append`` (rolling fingerprint, no whole-buffer
-  re-hash) whose ``tick()`` vets only the windows that became complete since
-  the last tick, reusing all earlier rows; every tick's result equals
-  ``vet_sliding`` over the same logical prefix.  ``amend``/``invalidate``
-  are the mutation hooks that make stale cache hits impossible.
+- ``VetStream(engine, window=, stride=, capacity=, history=)`` — a
+  fixed-capacity ring buffer with O(chunk) ``append`` (rolling fingerprint,
+  no whole-buffer re-hash) whose ``tick()`` vets only the windows that
+  became complete since the last tick, reusing all earlier rows; every
+  tick's result equals ``vet_sliding`` over the same logical prefix
+  (``history=`` bounds the retained result rows for indefinitely long
+  streams).  ``amend``/``invalidate`` are the mutation hooks that make stale
+  cache hits impossible.  The tick is factored into ``drain``/``commit``/
+  ``collect`` primitives so ``repro.fleet.VetMux`` can coalesce many
+  streams' deltas into shared shape-bucketed dispatches — one compiled call
+  per window length per fleet tick.
 """
 
 from .engine import (
@@ -81,7 +86,7 @@ from .engine import (
     VetEngine,
     default_engine,
 )
-from .stream import StreamStats, VetStream
+from .stream import StreamDelta, StreamStats, VetStream
 
-__all__ = ["BACKENDS", "BatchVetResult", "CacheInfo", "StreamStats",
-           "VetEngine", "VetStream", "default_engine"]
+__all__ = ["BACKENDS", "BatchVetResult", "CacheInfo", "StreamDelta",
+           "StreamStats", "VetEngine", "VetStream", "default_engine"]

@@ -124,6 +124,11 @@ class VetEngine:
         self.cut_space = cut_space
         self.interpret = interpret
         self._batch_fn = None  # compiled lazily on first vet_batch
+        # Backend dispatches ever issued (one per _vet_batch_impl call,
+        # cache hits excluded).  The fleet benchmarks/tests read this to
+        # prove coalescing: a mux tick is one dispatch per shape bucket
+        # where a per-stream loop pays one per stream.
+        self.dispatches = 0
         # Memoized results: fingerprint(buffer) + params -> BatchVetResult.
         # cache_size=0 disables memoization (e.g. for honest benchmarking).
         self._cache_size = int(cache_size)
@@ -273,6 +278,7 @@ class VetEngine:
                           lambda: self._vet_batch_impl(m))
 
     def _vet_batch_impl(self, m: np.ndarray) -> BatchVetResult:
+        self.dispatches += 1
         if self.backend == "numpy":
             return self._numpy_batch(m)
         if self._batch_fn is None:
@@ -287,6 +293,26 @@ class VetEngine:
             t=np.asarray(t, dtype=np.int32),
             n=np.full(w, m.shape[1], dtype=np.int64),
         )
+
+    def pad_rows_pow2(self, matrix: np.ndarray):
+        """Pad a delta batch to the next power-of-two row count.
+
+        Jitted backends compile one batch graph per row count; live deltas
+        (stream ticks, coalesced mux buckets) vary call to call, so padding
+        to the next power of two (repeating the last row — the caller
+        slices its rows back out) keeps compiles O(log max-delta) instead
+        of one per distinct size.  Returns ``(matrix, padding_rows)``;
+        the numpy backend (no compile cache) never pads.
+        """
+        n = matrix.shape[0]
+        if self.backend == "numpy" or n <= 1:
+            return matrix, 0
+        pad = 1 << (n - 1).bit_length()
+        if pad == n:
+            return matrix, 0
+        return (np.concatenate([matrix,
+                                np.repeat(matrix[-1:], pad - n, axis=0)]),
+                pad - n)
 
     def vet_one(self, times) -> VetResult:
         """Scalar convenience wrapper: one profile through the batched path."""

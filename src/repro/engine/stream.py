@@ -21,16 +21,24 @@ streaming path:
   complete since the last tick — one batched engine dispatch over the delta —
   and splices the new rows into the accumulated per-window results.  Rows for
   old windows are reused from the previous tick, never re-vetted.  Each tick
-  returns a ``BatchVetResult`` over *all* complete windows so far, equal to
-  ``engine.vet_sliding(prefix, window, stride)`` on the same logical prefix
-  (bitwise for the numpy backend; the jax/pallas backends carry their usual
-  differential contracts — see ``tests/test_vet_stream.py``).
+  returns a ``BatchVetResult`` over all retained complete windows so far,
+  equal to ``engine.vet_sliding(prefix, window, stride)`` on the same logical
+  prefix (bitwise for the numpy backend; the jax/pallas backends carry their
+  usual differential contracts — see ``tests/test_vet_stream.py``).
 - **Invalidation-aware caching.**  Mutating history is explicit:
   ``amend(start, values)`` rewrites resident records, re-keys the fingerprint
   (epoch tag) and re-vets exactly the windows that saw the amended records on
   the next tick; ``invalidate()`` is the blanket hook ("I changed the ring
   under you") that re-vets every window still fully resident.  Either way a
   stale cache hit is impossible: pre-mutation keys are never issued again.
+- **Mux primitives.**  The tick is factored into ``drain()`` (gather the
+  unvetted delta matrix + its content-pure cache key, side-effect free),
+  ``commit(delta, rows)`` (splice externally computed rows and advance the
+  vetted watermark) and ``collect()`` (the retained-result view).  ``tick()``
+  is exactly drain -> one engine dispatch -> commit -> collect; a
+  ``repro.fleet.VetMux`` drains many streams, coalesces their deltas into
+  shape-bucketed batched dispatches, and commits each stream's slice — the
+  per-stream results are identical by construction.
 
 The stream guarantees oracle equality only while every newly completed window
 is still fully resident at tick time; if appends outrun the ring
@@ -40,12 +48,13 @@ it sub-chunks an arbitrarily large append and ticks exactly when a further
 append could overrun an unvetted window, so callers never track the budget
 themselves.
 
-Memory: the ring is O(capacity) records, and the accumulated result rows are
-six scalars per complete window (~48 bytes) — the cost of the prefix-oracle
-contract (every tick returns *all* windows so far).  A consumer that only
-wants the newest rows can slice them off and let the returned snapshot go;
-bounding the retained history (a rolling result window) is the
-donated-buffer follow-up tracked in the ROADMAP.
+Memory: the ring is O(capacity) records.  By default the accumulated result
+rows are six scalars per complete window (~48 bytes) for the life of the
+stream — the full prefix-oracle contract.  ``history=H`` bounds that: only
+the newest ``H`` window rows are retained (oldest evicted past the cap, with
+``first_retained`` naming the first surviving window), so an indefinitely
+long stream holds O(capacity + H) memory while every retained row still
+equals the corresponding batch-oracle row.
 """
 
 from __future__ import annotations
@@ -57,9 +66,9 @@ import numpy as np
 
 from .engine import BatchVetResult, VetEngine, default_engine
 
-__all__ = ["StreamStats", "VetStream"]
+__all__ = ["StreamDelta", "StreamStats", "VetStream"]
 
-_GROW = 64  # initial per-field result capacity (windows); doubles as needed
+_GROW = 64  # initial per-field result capacity (windows); grows as needed
 
 
 class StreamStats(NamedTuple):
@@ -71,6 +80,25 @@ class StreamStats(NamedTuple):
     vetted: int  # window rows computed by engine dispatches
     reused: int  # window rows served from earlier ticks (sum over ticks)
     epoch: int  # invalidation epoch (amend/invalidate bumps)
+    evicted: int  # window rows dropped by the bounded history cap
+
+
+class StreamDelta(NamedTuple):
+    """An unvetted window delta drained from a stream (``VetStream.drain``).
+
+    ``matrix`` rows are windows ``[start, start + count)`` of the stream, in
+    window order; ``key`` is the engine-cache key for this exact delta — a
+    pure function of the (content-fingerprinted) append/amend history, so a
+    replay of the same stream hits the cache without hashing the matrix.
+    Draining is side-effect free: the delta only takes effect when passed to
+    ``commit`` with its computed rows.
+    """
+
+    start: int  # first window index covered by this delta
+    count: int  # number of windows in this delta
+    matrix: np.ndarray  # (count, window) float64 gather of the delta windows
+    key: tuple  # content-pure engine-cache key for these rows
+    epoch: int  # stream epoch at drain time (commit rejects a mismatch)
 
 
 class VetStream:
@@ -89,10 +117,14 @@ class VetStream:
     ``capacity`` bounds resident records (default ``4 * window``); it must be
     at least ``window``, and between two ticks you may append at most
     ``capacity - window - stride + 1`` records without losing a window.
+    ``history`` (optional) caps retained result rows: past the cap the oldest
+    rows are evicted and ``tick()`` returns only the newest ``history``
+    windows (``first_retained`` gives their absolute offset).
     """
 
     def __init__(self, engine: Optional[VetEngine] = None, *, window: int,
-                 stride: int = 1, capacity: Optional[int] = None):
+                 stride: int = 1, capacity: Optional[int] = None,
+                 history: Optional[int] = None):
         window = int(window)
         stride = int(stride)
         if window < 2:
@@ -104,10 +136,16 @@ class VetStream:
             raise ValueError(
                 f"capacity ({capacity}) must hold at least one window "
                 f"({window} records)")
+        if history is not None:
+            history = int(history)
+            if history < 1:
+                raise ValueError(
+                    f"history must retain >= 1 window row, got {history}")
         self.engine = engine if engine is not None else default_engine("jax")
         self.window = window
         self.stride = stride
         self.capacity = capacity
+        self.history = history
         self._ring = np.zeros(capacity, dtype=np.float64)
         self._total = 0  # records ever appended (logical stream length)
         self._vetted = 0  # windows whose rows are current in the result arrays
@@ -116,20 +154,26 @@ class VetStream:
         self._ticks = 0
         self._vetted_rows = 0
         self._reused_rows = 0
+        self._evicted_rows = 0
         self._last: Optional[BatchVetResult] = None
-        # Accumulated per-window rows (amortized-doubling growth).  Results
-        # are frozen *views* of these arrays — O(delta) per tick, not
-        # O(windows-so-far) copies — so rows already exposed to callers are
-        # never written again: a rewind (amend/invalidate) below the exposed
-        # watermark reallocates fresh row storage first (copy-on-write),
-        # leaving outstanding snapshots aliasing the detached buffers.
+        # Accumulated per-window rows.  Window ``k`` lives at physical slot
+        # ``k - _phys_base``; rows below ``_row_base`` are evicted (bounded
+        # history) and never re-exposed.  Results are frozen *views* of these
+        # arrays — O(delta) per tick, not O(windows-so-far) copies — so rows
+        # already exposed to callers are never written again: a rewind
+        # (amend/invalidate) below the exposed watermark, growth past the
+        # physical capacity, and history compaction all reallocate fresh row
+        # storage first (copy-on-write), leaving outstanding snapshots
+        # aliasing the detached buffers.
         self._rows = {
             "vet": np.empty(_GROW), "ei": np.empty(_GROW),
             "oc": np.empty(_GROW), "pr": np.empty(_GROW),
             "t": np.empty(_GROW, dtype=np.int32),
             "n": np.empty(_GROW, dtype=np.int64),
         }
-        self._exposed = 0  # rows handed out in some result so far
+        self._phys_base = 0  # absolute window index stored at physical slot 0
+        self._row_base = 0  # first retained (non-evicted) window index
+        self._exposed = 0  # absolute window count handed out in some result
         self._dirty_low: Optional[int] = None  # lowest re-vetted exposed row
 
     def __repr__(self) -> str:
@@ -151,11 +195,33 @@ class VetStream:
         return (self._total - self.window) // self.stride + 1
 
     @property
+    def pending_windows(self) -> int:
+        """Complete windows not yet vetted (what the next drain would take)."""
+        return max(0, self.complete_windows - self._vetted)
+
+    @property
+    def headroom(self) -> int:
+        """Records appendable before an unvetted window leaves the ring.
+
+        When this reaches 0, the next append may overwrite records of a
+        window that has not been vetted yet (a later ``tick`` then raises);
+        ``feed`` — and ``repro.fleet.VetMux.feed`` — tick exactly when it is
+        exhausted.
+        """
+        return self._vetted * self.stride + self.capacity - self._total
+
+    @property
+    def first_retained(self) -> int:
+        """Absolute index of the oldest window still held in the result rows
+        (0 unless a ``history`` cap evicted older rows)."""
+        return self._row_base
+
+    @property
     def stats(self) -> StreamStats:
         return StreamStats(ticks=self._ticks, records=self._total,
                            windows=self.complete_windows,
                            vetted=self._vetted_rows, reused=self._reused_rows,
-                           epoch=self._epoch)
+                           epoch=self._epoch, evicted=self._evicted_rows)
 
     @property
     def fingerprint(self) -> str:
@@ -210,7 +276,7 @@ class VetStream:
         self._total += arr.size
         return arr.size
 
-    def feed(self, times) -> int:
+    def feed(self, times, *, on_pressure=None) -> int:
         """Append an arbitrarily large chunk, ticking only when forced.
 
         Splits the chunk so that no unvetted window can fall out of the ring:
@@ -219,15 +285,27 @@ class VetStream:
         next ``tick()`` returns them without re-dispatch).  Ingest therefore
         stays O(chunk) unless overrun protection forces estimation work that
         any later ``tick()`` would have had to pay anyway.
+
+        ``on_pressure`` replaces the forced ``self.tick()`` for consumers
+        that must do more than vet when the budget runs out — the fleet mux
+        ticks the *whole fleet* coalesced, ``OnlineVet`` folds each forced
+        tick's rows into its EMA before eviction can drop them.  The hook
+        must advance the vetted watermark (tick this stream somehow) or the
+        feed cannot make progress.
         """
+        on_pressure = self.tick if on_pressure is None else on_pressure
         arr = self._coerce(times)
         pos = 0
         while pos < arr.size:
             # Records we may still append before the first unvetted window's
             # start (vetted * stride) would leave the resident suffix.
-            budget = self._vetted * self.stride + self.capacity - self._total
+            budget = self.headroom
             if budget <= 0:
-                self.tick()  # advances _vetted; budget >= capacity-window+1
+                on_pressure()  # advances _vetted: budget >= capacity-window+1
+                if self.headroom <= 0:
+                    raise RuntimeError(
+                        "feed on_pressure hook did not vet this stream; "
+                        "the hook must tick it (directly or via its mux)")
                 continue
             pos += self.append(arr[pos:pos + budget])
         return arr.size
@@ -238,12 +316,111 @@ class VetStream:
             % self.capacity
         return self._ring[idx]
 
+    def drain(self, max_windows: Optional[int] = None) -> Optional[StreamDelta]:
+        """Gather the unvetted complete-window delta; side-effect free.
+
+        Returns ``None`` when no unvetted complete window exists.  With
+        ``max_windows`` only the oldest that many pending windows are taken
+        (partial service under a mux tick budget); windows are always drained
+        in order, so repeated partial drains cover the stream exactly once.
+
+        Raises ``ValueError`` if the oldest unvetted window's records were
+        already overwritten in the ring (appends outran ``capacity``).
+        """
+        n_new = self.pending_windows
+        if n_new <= 0:
+            return None
+        if max_windows is not None:
+            n_new = min(n_new, int(max_windows))
+            if n_new <= 0:
+                return None
+        first_start = self._vetted * self.stride
+        if first_start < self._total - self.capacity:
+            raise ValueError(
+                f"stream overran the ring buffer: window "
+                f"{self._vetted} starts at record {first_start} but only "
+                f"records [{self._total - self.capacity}, {self._total}) "
+                f"are resident; tick() more often or raise capacity "
+                f"({self.capacity})")
+        starts = np.arange(self._vetted, self._vetted + n_new,
+                           dtype=np.int64) * self.stride
+        # Keyed on the rolling fingerprint + window span + epoch — the
+        # delta is a pure function of the (content-hashed) append/amend
+        # history, so no per-delta matrix re-hash is needed for a replay
+        # of the same stream to hit the engine cache.
+        key = ("stream", self.window, self.stride, self._vetted,
+               self._vetted + n_new, self._epoch, self._fp.hexdigest())
+        return StreamDelta(start=self._vetted, count=n_new,
+                           matrix=self._gather(starts), key=key,
+                           epoch=self._epoch)
+
+    def commit(self, delta: StreamDelta, rows: BatchVetResult) -> None:
+        """Splice externally computed ``rows`` for ``delta`` into the stream.
+
+        ``rows`` must be the engine's result for exactly ``delta.matrix``
+        (the mux computes it inside a coalesced dispatch and hands each
+        stream its slice).  Deltas commit in order: ``delta.start`` must
+        equal the current vetted watermark, so a delta drained before an
+        intervening ``commit``/``amend``/``invalidate`` is rejected instead
+        of silently splicing stale rows.
+        """
+        if delta.start != self._vetted:
+            raise ValueError(
+                f"stale delta: starts at window {delta.start} but the stream "
+                f"has vetted {self._vetted} windows — drain after every "
+                f"commit/amend/invalidate")
+        if delta.epoch != self._epoch:
+            # An amend of a *pending* window leaves the vetted watermark
+            # alone, so the start check above cannot catch a delta gathered
+            # before the mutation — the epoch does.
+            raise ValueError(
+                f"stale delta: drained at epoch {delta.epoch} but the stream "
+                f"was amended/invalidated since (epoch {self._epoch}) — "
+                f"re-drain to pick up the mutated records")
+        if rows.workers != delta.count:
+            raise ValueError(
+                f"delta covers {delta.count} windows but got {rows.workers} "
+                f"result rows")
+        self._reused_rows += self._vetted
+        self._vetted_rows += delta.count
+        self._splice(delta.start, rows)
+        self._vetted = delta.start + delta.count
+        if (self.history is not None
+                and self._vetted - self._row_base > self.history):
+            evict_to = self._vetted - self.history
+            self._evicted_rows += evict_to - self._row_base
+            self._row_base = evict_to
+        self._last = None
+
+    def collect(self) -> Optional[BatchVetResult]:
+        """Result over the retained vetted windows (frozen views), or ``None``
+        while no window has been vetted.  Row ``j`` is window
+        ``first_retained + j``.  Repeated calls between commits return the
+        same object.
+        """
+        n_rows = self._vetted - self._row_base
+        if n_rows <= 0:
+            return None
+        if self._last is not None:
+            return self._last
+        lo = self._row_base - self._phys_base
+        fields = {}
+        for name in ("vet", "ei", "oc", "pr", "t", "n"):
+            v = self._rows[name][lo:lo + n_rows]
+            v.flags.writeable = False  # restricts the view, not the base
+            fields[name] = v
+        res = BatchVetResult(**fields)
+        self._exposed = max(self._exposed, self._vetted)
+        self._last = res
+        return res
+
     def tick(self) -> Optional[BatchVetResult]:
         """Vet the windows that became complete since the last tick.
 
-        Returns a ``BatchVetResult`` over **all** complete windows of the
-        stream so far (row ``k`` = window ``k``), or ``None`` while no window
-        is complete yet.  Only the delta since the last tick is dispatched to
+        Returns a ``BatchVetResult`` over all retained complete windows of
+        the stream so far (row ``j`` = window ``first_retained + j``; with no
+        ``history`` cap that is every window), or ``None`` while no window is
+        complete yet.  Only the delta since the last tick is dispatched to
         the engine; earlier rows are reused.  A no-op tick (no new windows)
         returns the previous result object itself.
 
@@ -251,77 +428,49 @@ class VetStream:
         overwritten in the ring (appends outran ``capacity`` between ticks).
         """
         self._ticks += 1
-        n_complete = self.complete_windows
-        if n_complete == 0:
+        if self.complete_windows == 0:
             return None
-        if n_complete > self._vetted:
-            first_start = self._vetted * self.stride
-            if first_start < self._total - self.capacity:
-                raise ValueError(
-                    f"stream overran the ring buffer: window "
-                    f"{self._vetted} starts at record {first_start} but only "
-                    f"records [{self._total - self.capacity}, {self._total}) "
-                    f"are resident; tick() more often or raise capacity "
-                    f"({self.capacity})")
-            starts = np.arange(self._vetted, n_complete,
-                               dtype=np.int64) * self.stride
-            n_new = starts.size
-            matrix = self._gather(starts)
-            # Jitted backends compile one batch graph per row count; live
-            # deltas vary tick to tick, so pad to the next power of two
-            # (repeating the last row) and slice the result — compiles stay
-            # O(log max-delta) instead of one per distinct delta size.
-            if self.engine.backend != "numpy" and n_new > 1:
-                pad = 1 << (n_new - 1).bit_length()
-                if pad != n_new:
-                    matrix = np.concatenate(
-                        [matrix, np.repeat(matrix[-1:], pad - n_new, axis=0)])
-            # Keyed on the rolling fingerprint + window span + epoch — the
-            # delta is a pure function of the (content-hashed) append/amend
-            # history, so no per-tick matrix re-hash is needed for a replay
-            # of the same stream to hit the engine cache.
-            key = ("stream", self.window, self.stride, self._vetted,
-                   n_complete, self._epoch, self._fp.hexdigest())
-            delta = self.engine._memo(
-                key, lambda: self.engine._vet_batch_impl(matrix))
-            if delta.workers > n_new:
-                delta = BatchVetResult(*(a[:n_new] for a in delta))
-            self._reused_rows += self._vetted
-            self._vetted_rows += n_new
-            self._splice(self._vetted, delta)
-            self._vetted = n_complete
-            self._last = None
-        elif self._last is not None:
-            self._reused_rows += n_complete
-            return self._last
-        w = n_complete
-        fields = {}
-        for name in ("vet", "ei", "oc", "pr", "t", "n"):
-            v = self._rows[name][:w]
-            v.flags.writeable = False  # restricts the view, not the base
-            fields[name] = v
-        res = BatchVetResult(**fields)
-        self._exposed = max(self._exposed, w)
-        self._last = res
-        return res
+        delta = self.drain()
+        if delta is None:
+            if self._last is not None:
+                self._reused_rows += self.complete_windows
+                return self._last
+            return self.collect()
+        n_new = delta.count
+        matrix, _ = self.engine.pad_rows_pow2(delta.matrix)
+        rows = self.engine._memo(
+            delta.key, lambda: self.engine._vet_batch_impl(matrix))
+        if rows.workers > n_new:
+            rows = BatchVetResult(*(a[:n_new] for a in rows))
+        self.commit(delta, rows)
+        return self.collect()
 
     def _splice(self, at: int, delta: BatchVetResult) -> None:
-        need = at + delta.workers
+        """Write ``delta`` rows for windows ``[at, at + delta.workers)``."""
+        need_phys = at + delta.workers - self._phys_base
         cap = self._rows["vet"].size
         # Copy-on-write: rows < _exposed alias results already handed out;
         # a rewind (amend/invalidate) about to overwrite them detaches the
-        # old storage so those snapshots stay pristine.  Growth past capacity
-        # reallocates anyway, which detaches just the same.
-        if need > cap or at < self._exposed:
-            new_cap = max(need, 2 * cap)
+        # old storage so those snapshots stay pristine.  Growth past the
+        # physical capacity reallocates anyway — and compacts evicted
+        # history rows away, keeping storage O(retained + delta) — which
+        # detaches just the same.
+        if need_phys > cap or at < self._exposed:
+            new_base = min(self._row_base, at)
+            new_cap = max(2 * (at + delta.workers - new_base), _GROW)
+            old_lo = new_base - self._phys_base
+            keep = at - new_base
             for name, arr in self._rows.items():
                 grown = np.empty(new_cap, dtype=arr.dtype)
-                grown[:at] = arr[:at]
+                grown[:keep] = arr[old_lo:old_lo + keep]
                 self._rows[name] = grown
+            self._phys_base = new_base
             self._exposed = min(self._exposed, at)
+        lo = at - self._phys_base
+        hi = lo + delta.workers
         for name in ("vet", "ei", "oc", "pr", "t"):
-            self._rows[name][at:need] = getattr(delta, name)
-        self._rows["n"][at:need] = self.window
+            self._rows[name][lo:hi] = getattr(delta, name)
+        self._rows["n"][lo:hi] = self.window
 
     # -------------------------------------------------------- invalidation
     def amend(self, start: int, values) -> None:
@@ -332,9 +481,10 @@ class VetStream:
         instead of rebuilding the stream.  The rolling fingerprint is re-keyed
         (epoch tag), and the next ``tick()`` re-vets exactly the already-vetted
         windows from the first one covering ``start`` — never the whole
-        history — so no stale cached row survives.  Amending records that are
-        no longer resident (or whose re-vettable windows already left the
-        ring) raises.
+        history — so no stale cached row survives.  Rows already evicted by a
+        ``history`` cap are gone and stay gone (nothing stale can be served
+        from them).  Amending records that are no longer resident (or whose
+        re-vettable windows already left the ring) raises.
         """
         vals = np.atleast_1d(np.asarray(values, dtype=np.float64)).ravel()
         start = int(start)
@@ -349,24 +499,33 @@ class VetStream:
             raise ValueError(
                 f"amend range [{start}, {end}) starts before the resident "
                 f"suffix [{self._total - self.capacity}, {self._total})")
-        # First window that sees any amended record.
+        # Window span that sees any amended record, clamped to the bounded
+        # history's retained rows (evicted rows cannot be recomputed —
+        # when every affected row is already evicted, the ring content
+        # still re-keys but no retained row needs re-vetting).
         first_affected = (0 if start < self.window
                           else (start - self.window) // self.stride + 1)
-        if first_affected < self._vetted:
-            # Those rows must be recomputed — their windows must still be
-            # fully resident.
-            lo_resident = max(0, self._total - self.capacity)
-            if first_affected * self.stride < lo_resident:
-                raise ValueError(
-                    f"amend at record {start} affects window "
-                    f"{first_affected}, which is no longer fully resident; "
-                    f"raise capacity ({self.capacity}) to amend that far back")
+        last_affected = min(self._vetted - 1, (end - 1) // self.stride)
+        redo = last_affected >= self._row_base
+        if redo:
+            first_redo = max(first_affected, self._row_base)
+            if first_redo < self._vetted:
+                # Those rows must be recomputed — their windows must still
+                # be fully resident.
+                lo_resident = max(0, self._total - self.capacity)
+                if first_redo * self.stride < lo_resident:
+                    raise ValueError(
+                        f"amend at record {start} affects window "
+                        f"{first_redo}, which is no longer fully resident; "
+                        f"raise capacity ({self.capacity}) to amend that far "
+                        f"back")
         self._write(vals, start)
         self._epoch += 1
         self._fp.update(b"|amend|")
         self._fp.update(np.int64(start).tobytes())
         self._fp.update(vals.tobytes())
-        self._mark_rewound(first_affected)
+        if redo:
+            self._mark_rewound(first_redo)
 
     def invalidate(self) -> int:
         """Blanket hook: the ring was mutated outside ``append``/``amend``.
@@ -374,18 +533,20 @@ class VetStream:
         Bumps the epoch, folds the *current* resident content into the
         rolling fingerprint (so future cache keys reflect what is actually in
         the ring, not the stale append history), and marks every window still
-        fully resident for re-vetting on the next ``tick()``.  Rows for
-        windows that already left the ring keep their last computed values —
-        they cannot be recomputed from evicted records.  Returns the number
-        of window rows scheduled for re-vetting.
+        fully resident (and still retained by the ``history`` cap) for
+        re-vetting on the next ``tick()``.  Rows for windows that already
+        left the ring keep their last computed values — they cannot be
+        recomputed from evicted records.  Returns the number of window rows
+        scheduled for re-vetting.
         """
         self._epoch += 1
         self._fp.update(b"|invalidate|")
         self._fp.update(self.resident().tobytes())
         lo_resident = max(0, self._total - self.capacity)
         first_resident = -(-lo_resident // self.stride)  # ceil div
-        dropped = max(0, self._vetted - first_resident)
-        self._mark_rewound(first_resident)
+        first_redo = max(first_resident, self._row_base)
+        dropped = max(0, self._vetted - first_redo)
+        self._mark_rewound(first_redo)
         return dropped
 
     def _mark_rewound(self, first_dirty: int) -> None:

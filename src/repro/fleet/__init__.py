@@ -1,0 +1,60 @@
+"""repro.fleet — cross-stream vet multiplexing for live fleets.
+
+The paper's measure only pays off operationally when it is computed
+continuously for *every* task in a job (vet_job = mean over tasks, §4.4);
+cluster-scale what-if analysis needs per-task profiles across hundreds of
+concurrent slots.  One ``VetStream`` per consumer keeps each profile
+incremental, but ticking N isolated streams in a Python loop costs O(N)
+separate engine dispatches per decision — the scaling wall between "a few
+dozen workers" and "as fast as the hardware allows".
+
+This package is the layer between the streams and the engine:
+
+- ``VetMux`` (``repro.fleet.mux``) registers many streams (heterogeneous
+  window/stride/capacity/history), drains each stream's newly-complete
+  window delta per tick, coalesces the deltas across *all* streams into
+  shape-bucketed, pow2-padded batched dispatches — one compiled call per
+  distinct window length per tick — and commits each stream's slice back, so
+  every stream's rows stay equal to its own independent ``tick()`` (bitwise
+  on numpy, 1e-5 on jax/pallas; ``tests/test_fleet.py``).
+- ``repro.fleet.schedule`` is the tick planner: staleness-aged priority
+  ordering, per-tenant weighted fairness quotas, ring-overrun urgency
+  override, and budget backpressure with explicit deferral.
+- ``repro.fleet.scenarios`` is the seed-stable scenario bank (uniform fleet,
+  skewed stragglers, bursty arrivals, mixed window sizes, churn) that both
+  the differential suites and ``benchmarks/fleet.py`` drive; the benchmark
+  shows the mux cutting engine dispatches per fleet tick by the fleet size
+  (>= 10x floor pinned in ``tests/test_benchmark_results_schema.py``) at
+  256-1024 simulated workers.
+
+Routed consumers: ``repro.sched.straggler.VetController`` (one mux across
+all workers — ``decide()`` is one coalesced dispatch set instead of a
+per-worker loop) and ``repro.launch.serve`` (dashboard window snapshots
+ticked through a mux inside the decode loop).
+"""
+
+from .mux import MuxStats, MuxTick, VetMux
+from .scenarios import (
+    SCENARIOS,
+    FleetEvent,
+    FleetScenario,
+    StreamSpec,
+    build,
+    play,
+)
+from .schedule import StreamRequest, TickPlan, plan_tick
+
+__all__ = [
+    "SCENARIOS",
+    "FleetEvent",
+    "FleetScenario",
+    "MuxStats",
+    "MuxTick",
+    "StreamRequest",
+    "StreamSpec",
+    "TickPlan",
+    "VetMux",
+    "build",
+    "plan_tick",
+    "play",
+]

@@ -1,0 +1,298 @@
+"""VetMux: coalesce many live streams into shared batched engine dispatches.
+
+One live consumer = one ``VetStream``; a fleet of N consumers ticked one at a
+time pays N separate engine dispatches per decision — the O(workers) Python
+loop that caps a controller at a few dozen workers.  The mux replaces the
+loop with a three-phase tick over every registered stream:
+
+1. **Plan** (``repro.fleet.schedule``): pending window counts, priorities,
+   staleness and ring headroom go through the tick planner, which orders the
+   fleet, applies per-tenant fairness quotas, serves overrun-risk streams
+   first, and defers whatever exceeds the tick ``budget``.
+2. **Drain + coalesce**: each serviced stream's delta (``VetStream.drain``)
+   is grouped with every other delta of the same window length into a shape
+   bucket; each bucket's matrices concatenate into one (rows, window) batch,
+   padded to the next power of two rows so jit compiles stay O(log fleet)
+   instead of one per distinct row count.
+3. **Dispatch + commit**: one ``VetEngine`` call per shape bucket — a
+   homogeneous 1024-worker fleet is *one* compiled call per tick — and each
+   stream commits its slice of the result (``VetStream.commit``).  Rows are
+   bitwise what the stream's own ``tick()`` would have computed on the numpy
+   backend (row-independent scalar loop) and within the standing 1e-5
+   differential contract on jax/pallas (vmap rows are independent), so the
+   per-stream oracle equality is preserved — locked by
+   ``tests/test_fleet.py`` across the scenario bank.
+
+Caching composes: each coalesced dispatch is memoized in the engine's result
+cache under the tuple of its member deltas' content-pure keys, so replaying
+the same fleet into the same engine serves whole mux ticks from cache without
+hashing a single matrix.
+
+``feed`` mirrors ``VetStream.feed`` but under ring pressure triggers a *mux*
+tick (coalesced) instead of a per-stream one, so even overrun protection
+never degenerates into scalar dispatches.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, Hashable, Iterator, List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from ..engine import BatchVetResult, VetEngine, VetStream, default_engine
+from ..engine.stream import StreamDelta
+from .schedule import StreamRequest, TickPlan, plan_tick
+
+__all__ = ["MuxStats", "MuxTick", "VetMux"]
+
+
+class MuxStats(NamedTuple):
+    """Lifetime counters for one mux (``VetMux.stats``)."""
+
+    ticks: int  # mux ticks
+    dispatches: int  # coalesced engine dispatches issued
+    rows: int  # window rows committed across all streams
+    padded_rows: int  # pow2-padding overhead rows ever dispatched
+    deferred: int  # window-row deferrals (sum over ticks)
+    streams: int  # currently registered streams
+
+
+class MuxTick(NamedTuple):
+    """One mux tick's outcome.
+
+    ``results[sid]`` is the stream's retained-window result (same object
+    contract as ``VetStream.tick()``: ``None`` until the first window
+    completes, the previous object when nothing changed).
+    """
+
+    results: Dict[Hashable, Optional[BatchVetResult]]
+    serviced: Dict[Hashable, int]  # stream -> window rows dispatched this tick
+    deferred: Dict[Hashable, int]  # stream -> pending rows pushed to later ticks
+    urgent: Tuple[Hashable, ...]  # streams served out-of-budget (overrun risk)
+    dispatches: int  # engine dispatches this tick (== shape buckets hit)
+    rows: int  # window rows committed this tick
+    padded_rows: int  # pow2-padding overhead rows this tick
+
+    @property
+    def vet_job(self) -> float:
+        """Fleet-level vet_job: mean of every stream's newest window vet
+        (paper §4.4 across the live fleet)."""
+        newest = [float(r.vet[-1]) for r in self.results.values()
+                  if r is not None and r.workers > 0]
+        if not newest:
+            raise ValueError("no stream has a complete window yet")
+        return float(np.mean(newest))
+
+
+class _Member:
+    """Registration record for one stream."""
+
+    __slots__ = ("stream", "priority", "tenant", "staleness")
+
+    def __init__(self, stream: VetStream, priority: float, tenant: str):
+        self.stream = stream
+        self.priority = priority
+        self.tenant = tenant
+        self.staleness = 0
+
+
+class VetMux:
+    """Cross-stream vet multiplexer over one shared ``VetEngine``.
+
+    Usage::
+
+        mux = VetMux(engine, budget=256)
+        for wid in workers:
+            mux.register(wid, window=200, stride=100)
+        while serving:
+            for wid, chunk in arrivals:
+                mux.feed(wid, chunk)
+            tick = mux.tick()              # one dispatch per window-length
+            dashboard.update(tick.vet_job, tick.results)
+
+    ``budget`` caps window rows vetted per tick (``None`` = unbounded);
+    ``tenant_weights`` biases the fairness split (default: equal);
+    ``urgent_headroom`` is the ring headroom at or below which a stream is
+    served in full regardless of budget (see ``repro.fleet.schedule``).
+    """
+
+    def __init__(self, engine: Optional[VetEngine] = None, *,
+                 budget: Optional[int] = None,
+                 tenant_weights: Optional[Dict[str, float]] = None,
+                 urgent_headroom: int = 0):
+        self.engine = engine if engine is not None else default_engine("jax")
+        if budget is not None:
+            budget = int(budget)
+            if budget < 1:
+                raise ValueError(f"budget must be >= 1 window row, got {budget}")
+        self.budget = budget
+        self.tenant_weights = dict(tenant_weights or {})
+        self.urgent_headroom = int(urgent_headroom)
+        self._members: "OrderedDict[Hashable, _Member]" = OrderedDict()
+        self._ticks = 0
+        self._dispatches = 0
+        self._rows = 0
+        self._padded_rows = 0
+        self._deferred = 0
+
+    def __repr__(self) -> str:
+        return (f"VetMux(backend={self.engine.backend!r}, "
+                f"streams={len(self._members)}, budget={self.budget}, "
+                f"ticks={self._ticks})")
+
+    # -------------------------------------------------------- registration
+    def register(self, stream_id: Hashable, *, window: Optional[int] = None,
+                 stride: int = 1, capacity: Optional[int] = None,
+                 history: Optional[int] = None, priority: float = 0.0,
+                 tenant: str = "default",
+                 stream: Optional[VetStream] = None) -> VetStream:
+        """Add a stream to the fleet; returns the (created) ``VetStream``.
+
+        Either pass the window geometry (``window``/``stride``/``capacity``/
+        ``history``) and let the mux create the stream on its engine, or pass
+        an existing ``stream`` — which must already be bound to the mux's
+        engine, because coalesced dispatches run on exactly one engine.
+        """
+        if stream_id in self._members:
+            raise ValueError(f"stream {stream_id!r} is already registered")
+        if stream is None:
+            if window is None:
+                raise ValueError(
+                    "register needs window= (to create the stream) or "
+                    "stream= (to attach an existing one)")
+            stream = VetStream(self.engine, window=window, stride=stride,
+                               capacity=capacity, history=history)
+        elif stream.engine is not self.engine:
+            raise ValueError(
+                "attached stream must share the mux engine (coalesced "
+                "dispatches run on one engine); build it with "
+                "VetStream(mux.engine, ...)")
+        self._members[stream_id] = _Member(stream, float(priority),
+                                           str(tenant))
+        return stream
+
+    def deregister(self, stream_id: Hashable) -> VetStream:
+        """Remove a stream (fleet churn); returns it for the caller to keep
+        using standalone — its retained rows and vetted watermark survive."""
+        member = self._members.pop(self._require(stream_id))
+        return member.stream
+
+    def _require(self, stream_id: Hashable) -> Hashable:
+        if stream_id not in self._members:
+            raise KeyError(f"stream {stream_id!r} is not registered "
+                           f"({len(self._members)} streams live)")
+        return stream_id
+
+    def stream(self, stream_id: Hashable) -> VetStream:
+        return self._members[self._require(stream_id)].stream
+
+    def ids(self) -> Iterator[Hashable]:
+        return iter(self._members)
+
+    def __contains__(self, stream_id: Hashable) -> bool:
+        return stream_id in self._members
+
+    def __len__(self) -> int:
+        return len(self._members)
+
+    @property
+    def stats(self) -> MuxStats:
+        return MuxStats(ticks=self._ticks, dispatches=self._dispatches,
+                        rows=self._rows, padded_rows=self._padded_rows,
+                        deferred=self._deferred, streams=len(self._members))
+
+    # ------------------------------------------------------------- ingest
+    def feed(self, stream_id: Hashable, times) -> int:
+        """Append a chunk to one stream, mux-ticking only under ring pressure.
+
+        The fleet analogue of ``VetStream.feed``: when the stream's append
+        budget is exhausted, the *whole mux* ticks (one coalesced dispatch
+        set — every stream with pending windows benefits) instead of the
+        stream paying a private scalar-sized dispatch.
+        """
+        return self.stream(stream_id).feed(times, on_pressure=self.tick)
+
+    # -------------------------------------------------------------- tick
+    def tick(self) -> MuxTick:
+        """Drain every stream's newly complete windows through shared
+        batched dispatches; see the module docstring for the three phases.
+        """
+        self._ticks += 1
+        requests = [
+            StreamRequest(stream_id=sid, pending=m.stream.pending_windows,
+                          priority=m.priority, tenant=m.tenant,
+                          staleness=m.staleness,
+                          headroom=m.stream.headroom)
+            for sid, m in self._members.items()
+        ]
+        plan = plan_tick(requests, budget=self.budget,
+                         tenant_weights=self.tenant_weights,
+                         urgent_headroom=self.urgent_headroom)
+
+        # Drain in plan order, bucket by window length (the matrix column
+        # count) — heterogeneous fleets dispatch once per distinct length.
+        buckets: "OrderedDict[int, List[Tuple[Hashable, StreamDelta]]]" = \
+            OrderedDict()
+        for sid, take in plan.serve.items():
+            delta = self._members[sid].stream.drain(max_windows=take)
+            if delta is not None:
+                buckets.setdefault(delta.matrix.shape[1], []).append(
+                    (sid, delta))
+
+        dispatches = rows = padded = 0
+        serviced: Dict[Hashable, int] = {}
+        for wlen, group in buckets.items():
+            big = (group[0][1].matrix if len(group) == 1
+                   else np.concatenate([d.matrix for _, d in group]))
+            # Same pow2 padding contract as VetStream.tick: compiled batch
+            # shapes stay O(log fleet) as deltas fluctuate tick to tick.
+            big, pad_rows = self.engine.pad_rows_pow2(big)
+            padded += pad_rows
+            key = ("mux", wlen, tuple(d.key for _, d in group))
+            res = self.engine._memo(
+                key, lambda big=big: self.engine._vet_batch_impl(big))
+            dispatches += 1
+            off = 0
+            for sid, delta in group:
+                seg = BatchVetResult(*(a[off:off + delta.count] for a in res))
+                self._members[sid].stream.commit(delta, seg)
+                serviced[sid] = delta.count
+                off += delta.count
+                rows += delta.count
+
+        results: Dict[Hashable, Optional[BatchVetResult]] = {}
+        deferred: Dict[Hashable, int] = {}
+        for sid, m in self._members.items():
+            results[sid] = m.stream.collect()
+            left = m.stream.pending_windows
+            if left > 0:
+                deferred[sid] = left
+            # Staleness counts ticks since the stream last received *any*
+            # service while waiting; a partially served stream is not
+            # starving (fairness already gave its tenant a share), so only
+            # fully passed-over streams age.
+            if sid in serviced:
+                m.staleness = 0
+            elif left > 0:
+                m.staleness += 1
+
+        self._dispatches += dispatches
+        self._rows += rows
+        self._padded_rows += padded
+        self._deferred += sum(deferred.values())
+        return MuxTick(results=results, serviced=serviced, deferred=deferred,
+                       urgent=plan.urgent, dispatches=dispatches, rows=rows,
+                       padded_rows=padded)
+
+    def flush(self, max_ticks: int = 1_000_000) -> MuxTick:
+        """Tick until no stream has deferred work (drain the backlog after a
+        burst, or before reading final fleet state); returns the last tick."""
+        tick = self.tick()
+        while tick.deferred:
+            max_ticks -= 1
+            if max_ticks <= 0:
+                raise RuntimeError("flush did not converge — is new work "
+                                   "arriving concurrently?")
+            tick = self.tick()
+        return tick

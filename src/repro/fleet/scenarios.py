@@ -1,0 +1,247 @@
+"""Scenario bank: seed-stable fleet workloads driving the simulator.
+
+Each scenario compiles a fleet shape (stream specs: window geometry,
+priority, tenant) plus a per-tick event script (record-time chunks from the
+seed-stable ``repro.profiling.simulator``, joins, leaves) into a
+``FleetScenario`` that ``play()`` can drive through any ``VetMux`` — the
+differential suites replay the same scenario through the mux and through
+independent per-stream ``tick()``s and require equal rows, and the fleet
+benchmark scales the same shapes to 256-1024 workers.
+
+The bank (``SCENARIOS``):
+
+- ``uniform``            — homogeneous fleet, steady identical arrivals; the
+  best case for coalescing (one shape bucket, one dispatch per tick).
+- ``skewed_stragglers``  — a fraction of workers carries a much heavier
+  Pareto overhead channel (the paper's straggler signature: vet outliers).
+- ``bursty``             — per-tick arrivals drawn from {nothing, trickle,
+  burst}; quiet workers must cost nothing, bursts must not overrun rings.
+- ``mixed_windows``      — window lengths cycle through a small set, so a
+  mux tick needs one dispatch per distinct length (shape buckets), not one
+  per stream.
+- ``churn``              — workers join mid-run and leave before the end;
+  registration order, results and dispatch counts must stay deterministic.
+
+All randomness flows from ``numpy.random.default_rng(seed)`` / the
+simulator's seeded draws, so every scenario is bitwise reproducible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Mapping, Tuple
+
+import numpy as np
+
+from ..profiling import simulate_records
+
+__all__ = ["FleetEvent", "FleetScenario", "SCENARIOS", "StreamSpec",
+           "build", "play"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """One stream's registration parameters."""
+
+    stream_id: str
+    window: int
+    stride: int
+    capacity: int
+    priority: float = 0.0
+    tenant: str = "default"
+
+    def register(self, mux) -> None:
+        mux.register(self.stream_id, window=self.window, stride=self.stride,
+                     capacity=self.capacity, priority=self.priority,
+                     tenant=self.tenant)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetEvent:
+    """One tick of fleet traffic: chunks to feed, plus churn."""
+
+    chunks: Mapping[str, np.ndarray]  # stream_id -> record-time chunk
+    joins: Tuple[StreamSpec, ...] = ()  # registered before this tick's feeds
+    leaves: Tuple[str, ...] = ()  # deregistered after this tick
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetScenario:
+    """A named fleet shape + its per-tick event script."""
+
+    name: str
+    specs: Tuple[StreamSpec, ...]
+    events: Tuple[FleetEvent, ...]
+
+    @property
+    def n_streams(self) -> int:
+        return len(self.specs) + sum(len(e.joins) for e in self.events)
+
+
+def play(scenario: FleetScenario, mux) -> List:
+    """Drive a scenario through a mux: register, feed, tick per event.
+
+    Returns the per-event ``MuxTick`` list.  Joins are applied before the
+    event's feeds, leaves after its tick — a leaver's final rows are in the
+    tick that saw its last records.
+    """
+    for spec in scenario.specs:
+        spec.register(mux)
+    out = []
+    for event in scenario.events:
+        for spec in event.joins:
+            spec.register(mux)
+        for sid, chunk in event.chunks.items():
+            mux.feed(sid, chunk)
+        out.append(mux.tick())
+        for sid in event.leaves:
+            mux.deregister(sid)
+    return out
+
+
+# ------------------------------------------------------------------ bank
+def _worker_times(n: int, seed: int, worker: int,
+                  overhead_scale: float = 5e-3) -> np.ndarray:
+    """One worker's whole-run record times (seed-stable simulator draw)."""
+    return simulate_records(n, seed=seed * 1000 + worker,
+                            overhead_scale=overhead_scale).times
+
+
+def _sid(i: int) -> str:
+    return f"w{i:04d}"
+
+
+def uniform(*, n_workers: int = 8, n_ticks: int = 6, window: int = 32,
+            stride: int = 0, chunk: int = 0, seed: int = 0) -> FleetScenario:
+    """Homogeneous fleet, steady arrivals: one shape bucket per tick."""
+    stride = stride or window // 2
+    chunk = chunk or window // 2
+    specs = tuple(StreamSpec(_sid(i), window, stride, 4 * window)
+                  for i in range(n_workers))
+    times = {s.stream_id: _worker_times(n_ticks * chunk, seed, i)
+             for i, s in enumerate(specs)}
+    events = tuple(
+        FleetEvent(chunks={sid: t[k * chunk:(k + 1) * chunk]
+                           for sid, t in times.items()})
+        for k in range(n_ticks))
+    return FleetScenario("uniform", specs, events)
+
+
+def skewed_stragglers(*, n_workers: int = 8, n_ticks: int = 6,
+                      window: int = 32, straggler_frac: float = 0.25,
+                      straggler_boost: float = 8.0,
+                      seed: int = 0) -> FleetScenario:
+    """A slice of the fleet pays a much heavier reducible-overhead tail."""
+    stride = window // 2
+    chunk = window // 2
+    n_slow = max(1, int(n_workers * straggler_frac))
+    specs = tuple(StreamSpec(_sid(i), window, stride, 4 * window)
+                  for i in range(n_workers))
+    times = {
+        s.stream_id: _worker_times(
+            n_ticks * chunk, seed, i,
+            overhead_scale=5e-3 * (straggler_boost if i < n_slow else 1.0))
+        for i, s in enumerate(specs)
+    }
+    events = tuple(
+        FleetEvent(chunks={sid: t[k * chunk:(k + 1) * chunk]
+                           for sid, t in times.items()})
+        for k in range(n_ticks))
+    return FleetScenario("skewed_stragglers", specs, events)
+
+
+def bursty(*, n_workers: int = 8, n_ticks: int = 8, window: int = 32,
+           seed: int = 0) -> FleetScenario:
+    """Arrivals per tick drawn from {0, trickle, burst} per worker."""
+    stride = window // 2
+    rng = np.random.default_rng(seed)
+    # Ring sized for the worst burst: feed()/mux.feed() would coalesce-tick
+    # under pressure anyway, but keeping bursts resident exercises pure
+    # coalescing rather than overrun protection.
+    burst = 3 * window
+    specs = tuple(StreamSpec(_sid(i), window, stride, window + 2 * burst)
+                  for i in range(n_workers))
+    sizes = rng.choice([0, window // 4, burst], size=(n_ticks, n_workers),
+                       p=[0.35, 0.45, 0.2])
+    times = {s.stream_id: _worker_times(int(sizes[:, i].sum()) or 1, seed, i)
+             for i, s in enumerate(specs)}
+    cursor = {sid: 0 for sid in times}
+    events = []
+    for k in range(n_ticks):
+        chunks: Dict[str, np.ndarray] = {}
+        for i, s in enumerate(specs):
+            size = int(sizes[k, i])
+            if size:
+                lo = cursor[s.stream_id]
+                chunks[s.stream_id] = times[s.stream_id][lo:lo + size]
+                cursor[s.stream_id] = lo + size
+        events.append(FleetEvent(chunks=chunks))
+    return FleetScenario("bursty", specs, tuple(events))
+
+
+def mixed_windows(*, n_workers: int = 9, n_ticks: int = 6,
+                  windows: Tuple[int, ...] = (16, 32, 64),
+                  seed: int = 0) -> FleetScenario:
+    """Heterogeneous window lengths: one dispatch per distinct length."""
+    specs = []
+    for i in range(n_workers):
+        w = windows[i % len(windows)]
+        specs.append(StreamSpec(_sid(i), w, w // 2, 4 * w,
+                                tenant=f"t{i % len(windows)}"))
+    chunk = {s.stream_id: s.window // 2 for s in specs}
+    times = {s.stream_id: _worker_times(n_ticks * chunk[s.stream_id], seed, i)
+             for i, s in enumerate(specs)}
+    events = tuple(
+        FleetEvent(chunks={
+            sid: times[sid][k * c:(k + 1) * c]
+            for sid, c in chunk.items()})
+        for k in range(n_ticks))
+    return FleetScenario("mixed_windows", tuple(specs), events)
+
+
+def churn(*, n_workers: int = 8, n_ticks: int = 8, window: int = 32,
+          seed: int = 0) -> FleetScenario:
+    """Workers join mid-run and leave before the end (elastic fleet)."""
+    stride = window // 2
+    chunk = window // 2
+    n_base = max(2, n_workers - n_workers // 3)
+    n_join = n_workers - n_base
+    join_tick = n_ticks // 3
+    leave_tick = 2 * n_ticks // 3
+    specs = tuple(StreamSpec(_sid(i), window, stride, 4 * window)
+                  for i in range(n_base))
+    joiners = tuple(StreamSpec(_sid(n_base + j), window, stride, 4 * window)
+                    for j in range(n_join))
+    leavers = tuple(s.stream_id for s in specs[:max(1, n_base // 4)])
+    times = {_sid(i): _worker_times(n_ticks * chunk, seed, i)
+             for i in range(n_base + n_join)}
+    events = []
+    for k in range(n_ticks):
+        live = [s.stream_id for s in specs
+                if not (k > leave_tick and s.stream_id in leavers)]
+        if k >= join_tick:
+            live += [s.stream_id for s in joiners]
+        events.append(FleetEvent(
+            chunks={sid: times[sid][k * chunk:(k + 1) * chunk]
+                    for sid in live},
+            joins=joiners if k == join_tick else (),
+            leaves=leavers if k == leave_tick else (),
+        ))
+    return FleetScenario("churn", specs, tuple(events))
+
+
+SCENARIOS: Dict[str, Callable[..., FleetScenario]] = {
+    "uniform": uniform,
+    "skewed_stragglers": skewed_stragglers,
+    "bursty": bursty,
+    "mixed_windows": mixed_windows,
+    "churn": churn,
+}
+
+
+def build(name: str, **overrides) -> FleetScenario:
+    """Build a bank scenario by name (sizes overridable for tests/benchmarks)."""
+    if name not in SCENARIOS:
+        raise ValueError(f"unknown scenario {name!r}; choose from "
+                         f"{sorted(SCENARIOS)}")
+    return SCENARIOS[name](**overrides)

@@ -1,0 +1,145 @@
+"""Tick planning for the vet mux: who gets vetted this tick, and how much.
+
+A ``VetMux`` tick has a fixed amount of estimation work it is willing to do
+(the ``budget``, in window rows).  The planner turns the fleet's pending
+state into a deterministic service order:
+
+- **Urgency first.**  A stream whose ring headroom is exhausted *must* be
+  drained now — deferring it means the next append overruns the ring and a
+  later tick raises.  Urgent streams are served in full, even past the
+  budget (correctness beats smoothing; the overshoot is visible in the
+  plan).
+- **Aging, not starvation.**  Within a tenant, streams are ordered by
+  ``priority + staleness``: staleness counts consecutive mux ticks a stream
+  sat with pending work unserviced, so any fixed priority gap is eventually
+  out-aged and every stream is served in bounded time.
+- **Tenant fairness.**  The remaining budget is split across tenants with
+  pending demand by weighted water-filling (default weight 1): each round
+  every active tenant gets its weighted integer share, unused share flows
+  back into the pool, and rounds repeat until the budget or the demand is
+  exhausted.  A tenant with one hot stream cannot crowd out the rest of the
+  fleet.
+- **Backpressure.**  Whatever the budget cannot cover is *deferred*, not
+  dropped: the plan names the leftover per stream, the mux bumps their
+  staleness, and the rows are picked up by later ticks (windows are always
+  drained in order, so deferral never skips or reorders results).
+
+Everything is deterministic: ties break on registration order, tenants
+iterate in sorted name order, and no randomness is involved — the same fleet
+state always yields the same plan (the scenario differential suites depend
+on this).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, Hashable, List, Mapping, NamedTuple, Optional, Sequence, Tuple
+
+__all__ = ["StreamRequest", "TickPlan", "plan_tick"]
+
+
+class StreamRequest(NamedTuple):
+    """One stream's pending state as seen by the planner."""
+
+    stream_id: Hashable
+    pending: int  # complete-but-unvetted windows
+    priority: float  # larger = served earlier (subject to aging/fairness)
+    tenant: str  # fairness-quota group
+    staleness: int  # consecutive mux ticks left unserviced with pending > 0
+    headroom: int  # appendable records before the ring overruns
+
+
+class TickPlan(NamedTuple):
+    """The planner's verdict for one mux tick."""
+
+    serve: "OrderedDict[Hashable, int]"  # stream -> windows to drain, in order
+    deferred: Dict[Hashable, int]  # stream -> pending windows pushed out
+    urgent: Tuple[Hashable, ...]  # streams served out-of-budget (overrun risk)
+
+    @property
+    def total_rows(self) -> int:
+        return sum(self.serve.values())
+
+
+def plan_tick(
+    requests: Sequence[StreamRequest],
+    *,
+    budget: Optional[int] = None,
+    tenant_weights: Optional[Mapping[str, float]] = None,
+    urgent_headroom: int = 0,
+) -> TickPlan:
+    """Order and bound this tick's estimation work; see the module docstring.
+
+    ``budget`` is the window-row cap for the tick (``None`` = unbounded:
+    serve everything, still in urgency/priority order).  ``urgent_headroom``
+    is the headroom at or below which a stream is treated as
+    must-serve-in-full.
+    """
+    order = {r.stream_id: i for i, r in enumerate(requests)}
+    if len(order) != len(requests):
+        raise ValueError("duplicate stream_id in plan_tick requests")
+    live = [r for r in requests if r.pending > 0]
+
+    def rank(r: StreamRequest):
+        # Aging: staleness adds to priority, so deferral is self-correcting.
+        return (-(r.priority + r.staleness), order[r.stream_id])
+
+    urgent = sorted((r for r in live if r.headroom <= urgent_headroom),
+                    key=rank)
+    rest = sorted((r for r in live if r.headroom > urgent_headroom), key=rank)
+
+    serve: "OrderedDict[Hashable, int]" = OrderedDict()
+    for r in urgent:
+        serve[r.stream_id] = r.pending
+
+    if budget is None:
+        for r in rest:
+            serve[r.stream_id] = r.pending
+        return TickPlan(serve=serve, deferred={},
+                        urgent=tuple(r.stream_id for r in urgent))
+
+    weights = dict(tenant_weights or {})
+    for t, w in weights.items():
+        if w <= 0:
+            raise ValueError(f"tenant weight must be > 0, got {t!r}: {w}")
+
+    # Weighted water-filling over the non-urgent demand.
+    pool = max(0, int(budget) - sum(r.pending for r in urgent))
+    alloc: Dict[Hashable, int] = {r.stream_id: 0 for r in rest}
+    queues: Dict[str, List[StreamRequest]] = {}
+    for r in rest:  # rest is already rank-sorted; queues inherit the order
+        queues.setdefault(r.tenant, []).append(r)
+
+    def demand(t: str) -> int:
+        return sum(r.pending - alloc[r.stream_id] for r in queues[t])
+
+    while pool > 0:
+        active = [t for t in sorted(queues) if demand(t) > 0]
+        if not active:
+            break
+        total_w = sum(weights.get(t, 1.0) for t in active)
+        shares = {t: int(pool * weights.get(t, 1.0) / total_w)
+                  for t in active}
+        for i in range(pool - sum(shares.values())):  # remainder, round-robin
+            shares[active[i % len(active)]] += 1
+        granted = 0
+        for t in active:
+            give = shares[t]
+            for r in queues[t]:
+                if give <= 0:
+                    break
+                take = min(r.pending - alloc[r.stream_id], give)
+                alloc[r.stream_id] += take
+                give -= take
+                granted += take
+        if granted == 0:
+            break
+        pool -= granted
+
+    for r in rest:  # global rank order, after the urgent block
+        if alloc[r.stream_id] > 0:
+            serve[r.stream_id] = alloc[r.stream_id]
+    deferred = {r.stream_id: r.pending - alloc[r.stream_id]
+                for r in rest if r.pending - alloc[r.stream_id] > 0}
+    return TickPlan(serve=serve, deferred=deferred,
+                    urgent=tuple(r.stream_id for r in urgent))

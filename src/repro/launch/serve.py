@@ -5,9 +5,11 @@ prefill(prompt batch) -> decode loop; every decode step is a profiled record
 optimality dashboard as training: vet per serving worker (estimated by the
 shared ``VetEngine``), EI as the estimated ideal per-token latency, and
 per-window snapshots showing vet drift over the generation.  The window
-snapshots come from a ``VetStream`` ticked *inside* the decode loop — each
-completed unit-record is appended in O(1) and only newly completed windows
-are ever vetted — instead of re-slicing the full profile after the run.
+snapshots come from a ``VetStream`` registered in a ``repro.fleet.VetMux``
+and ticked *inside* the decode loop — each completed unit-record is appended
+in O(1) and only newly completed windows are ever vetted, through the same
+coalesced dispatch path a multi-worker dashboard uses — instead of
+re-slicing the full profile after the run.
 """
 
 from __future__ import annotations
@@ -21,13 +23,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config
-from ..engine import BatchVetResult, VetEngine, VetStream, default_engine
+from ..engine import BatchVetResult, VetEngine, default_engine
+from ..fleet import VetMux
 from ..models import decode_step, init_cache, init_params, prefill
 from ..profiling import RecordProfiler
 
 __all__ = ["ServeResult", "serve"]
 
 _SNAPSHOT_WINDOW = 32  # unit-records per windowed vet snapshot
+_SNAPSHOT_HISTORY = 64  # newest window snapshots retained for the drift view
 
 
 @dataclasses.dataclass
@@ -37,8 +41,9 @@ class ServeResult:
     ei: Optional[float]
     pr: Optional[float]
     tokens_per_s: float
-    # Windowed per-worker snapshots from the stream ticked during decode
-    # (None when the run produced fewer than two full windows).
+    # Windowed per-worker snapshots (newest <= _SNAPSHOT_HISTORY windows)
+    # from the stream ticked during decode (None when the run produced
+    # fewer than two full windows).
     windows: Optional[BatchVetResult] = None
 
 
@@ -76,14 +81,20 @@ def serve(
     tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
 
     prof = RecordProfiler(unit=record_unit)
-    # Live window snapshots: a stream ticked as unit-records complete, so
-    # each tick vets only the windows the last unit finished (the snapshot
-    # windows are bucket-free at this size, so the stream engine needs no
-    # size-adapted bucket count).
-    stream = VetStream(engine if engine is not None
-                       else default_engine("jax", buckets=64),
-                       window=_SNAPSHOT_WINDOW, stride=_SNAPSHOT_WINDOW,
-                       capacity=4 * _SNAPSHOT_WINDOW)
+    # Live window snapshots: this worker's stream registered in a mux and
+    # ticked as unit-records complete, so each tick vets only the windows
+    # the last unit finished through the fleet's coalesced dispatch path (a
+    # multi-worker deployment registers every decode worker in the same mux;
+    # the snapshot windows are bucket-free at this size, so the stream
+    # engine needs no size-adapted bucket count).
+    mux = VetMux(engine if engine is not None
+                 else default_engine("jax", buckets=64))
+    # The drift view keeps the newest _SNAPSHOT_HISTORY windows: plenty for
+    # any one generation, bounded for a serve loop that lives forever.
+    stream = mux.register("decode", window=_SNAPSHOT_WINDOW,
+                          stride=_SNAPSHOT_WINDOW,
+                          capacity=4 * _SNAPSHOT_WINDOW,
+                          history=_SNAPSHOT_HISTORY)
     fed_units = 0
     vet_s = 0.0  # estimation overhead, excluded from the throughput wall
     out = [tok]
@@ -98,9 +109,9 @@ def serve(
             # O(new units) extraction + incremental tick: only the windows
             # this unit completed are vetted.
             new_units = prof.unit_times(start=fed_units)
-            stream.append(new_units)
+            mux.feed("decode", new_units)
             fed_units += new_units.size
-            stream.tick()
+            mux.tick()
             vet_s += time.perf_counter() - tv
     wall = time.perf_counter() - t0 - vet_s
     gen = np.asarray(jnp.concatenate(out, axis=1))
@@ -117,16 +128,17 @@ def serve(
         vet, ei, pr = float(r.vet), float(r.ei), float(r.pr)
         if verbose:
             print(f"[serve] vet={vet:.3f} EI={ei:.4f}s PR={pr:.4f}s")
-        stream.append(times[fed_units:])  # trailing units after the loop
-        win = stream.tick()
+        mux.feed("decode", times[fed_units:])  # trailing units after the loop
+        win = mux.tick().results["decode"]
         if win is not None and win.workers >= 2:
             windows = win
             if verbose:
                 ws = " ".join(f"{v:.2f}" for v in windows.vet)
                 st = stream.stats
+                ms = mux.stats
                 print(f"[serve] window vets: {ws} "
                       f"({st.vetted} vetted / {st.reused} reused rows over "
-                      f"{st.ticks} ticks)")
+                      f"{ms.ticks} mux ticks / {ms.dispatches} dispatches)")
     tps = batch * gen_len / wall
     if verbose:
         print(f"[serve] {batch}x{gen_len} tokens in {wall:.2f}s = {tps:.1f} tok/s")

@@ -10,14 +10,17 @@ per-worker record profiles and emits concurrency / straggler decisions:
   * one worker's vet an outlier   -> straggler: flag for re-shard/eviction
     (KS test against the pooled population confirms it is not noise).
 
-Estimation routes through per-worker ``repro.engine.VetStream``s: ``feed``
-appends chunks into a worker's ring buffer in O(chunk) and ``decide()`` ticks
-each stream, which dispatches only the windows that became complete since the
-last decision — workers that received no records between decisions reuse
-their previous rows outright (no re-gather, no buffer re-hash), so an idle
-poll pays nothing per quiet worker.  Workers still warming up (fewer than a
-full window of records) are vetted over their resident buffers in one
-batched, memoized ``vet_many`` call.
+Estimation routes through one ``repro.fleet.VetMux`` holding a per-worker
+``VetStream``: ``feed`` appends chunks into a worker's ring buffer in
+O(chunk), and ``decide()`` is a single mux tick — every worker's newly
+complete windows are drained and coalesced into one batched engine dispatch
+per window-length bucket (all workers share one geometry here, so one
+dispatch covers the whole fleet) instead of the former one-stream-at-a-time
+loop of O(workers) dispatches.  Workers that received no records between
+decisions reuse their previous rows outright (no re-gather, no buffer
+re-hash), so an idle poll pays nothing per quiet worker.  Workers still
+warming up (fewer than a full window of records) are vetted over their
+resident buffers in one batched, memoized ``vet_many`` call.
 """
 
 from __future__ import annotations
@@ -28,7 +31,8 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from ..core import ks_2samp
-from ..engine import VetEngine, VetStream, default_engine
+from ..engine import VetEngine, default_engine
+from ..fleet import VetMux
 
 __all__ = ["SchedulerDecision", "VetController"]
 
@@ -72,29 +76,38 @@ class VetController:
         self.straggler_pvalue = straggler_pvalue
         self.straggler_ratio = straggler_ratio
         self.engine = engine if engine is not None else default_engine("jax")
-        self._streams: Dict[int, VetStream] = {
-            i: self._make_stream() for i in range(n_workers)
-        }
+        # One mux across the whole worker fleet: decide() drains every
+        # worker's newly complete windows in one coalesced dispatch set.
+        self.mux = VetMux(self.engine)
+        for i in range(n_workers):
+            self._register(i)
 
-    def _make_stream(self) -> VetStream:
+    def _register(self, worker_id: int) -> None:
         # Half-window stride: a worker's vet refreshes every window/2 records;
         # 4x capacity bounds the per-feed sub-chunks and keeps the latest full
-        # window resident for the KS straggler test.
-        return VetStream(self.engine, window=self.window,
-                         stride=max(1, self.window // 2),
-                         capacity=4 * self.window)
+        # window resident for the KS straggler test.  decide() only reads the
+        # newest row per worker, so a small bounded history keeps a long-lived
+        # fleet's memory O(workers), not O(records ever seen).
+        self.mux.register(worker_id, window=self.window,
+                          stride=max(1, self.window // 2),
+                          capacity=4 * self.window, history=8)
 
     def feed(self, worker_id: int, record_times: Sequence[float]) -> None:
-        # O(chunk) ingest: the stream only ticks mid-feed if overrun
-        # protection forces it; estimation otherwise waits for decide().
-        stream = self._streams.setdefault(worker_id, self._make_stream())
-        stream.feed(np.asarray(record_times, dtype=np.float64).ravel())
+        # O(chunk) ingest: the mux only ticks mid-feed if overrun protection
+        # forces it (coalesced even then); estimation otherwise waits for
+        # decide().
+        if worker_id not in self.mux:
+            self._register(worker_id)
+        self.mux.feed(worker_id,
+                      np.asarray(record_times, dtype=np.float64).ravel())
 
     def ready(self) -> bool:
-        return all(s.total_records >= 32 for s in self._streams.values())
+        return all(self.mux.stream(i).total_records >= 32
+                   for i in self.mux.ids())
 
     def decide(self) -> SchedulerDecision:
-        ids = [i for i, s in self._streams.items() if s.total_records >= 32]
+        ids = [i for i in self.mux.ids()
+               if self.mux.stream(i).total_records >= 32]
         if not ids:
             return SchedulerDecision(self.n_workers, reason="insufficient data")
         # Buffer copies are gathered lazily: an idle poll (no new windows, no
@@ -103,18 +116,20 @@ class VetController:
 
         def profile(i: int) -> np.ndarray:
             if i not in profiles:
-                profiles[i] = self._streams[i].latest(self.window)
+                profiles[i] = self.mux.stream(i).latest(self.window)
             return profiles[i]
 
-        # Tick each worker's stream: only workers that completed new windows
-        # since the last decision dispatch any estimation work.  Workers still
+        # One mux tick for the whole fleet: only workers that completed new
+        # windows since the last decision contribute rows, and all of them
+        # share one batched dispatch per window-length bucket.  Workers still
         # short of their first full window are vetted over their resident
         # buffers in one batched vet_many (grouped by length, memoized — an
         # unchanged warmup fleet is a single cache hit).
+        tick = self.mux.tick()
         vets: Dict[int, float] = {}
         warmup: List[int] = []
         for i in ids:
-            res = self._streams[i].tick()
+            res = tick.results[i]
             if res is not None:
                 vets[i] = float(res.vet[-1])
             else:

@@ -29,6 +29,9 @@ SCHEMAS = {
     "table2_slots": {"ei_drift", "pr_growth", "table"},
     "vet_engine": {"workers", "window", "numpy", "jax", "pallas",
                    "jax_speedup_vs_numpy", "windowed", "streaming"},
+    "fleet": {"workers", "window", "stride", "chunk", "numpy", "jax",
+              "pallas", "dispatch_reduction", "scaling_1024",
+              "mixed_windows"},
     "kernels_bench": {"changepoint", "flash", "ssd", "vet_engine",
                       "vet_engine_windowed", "vet_engine_streaming"},
     "fig1_gap": None,  # free-form payloads: presence + valid JSON only
@@ -44,6 +47,9 @@ WINDOWED_KEYS = {"n_records", "window", "stride", "num_windows",
                  "cached_tick_us", "batched_speedup_vs_scalar_loop"}
 STREAMING_KEYS = {"n_records", "window", "stride", "chunk", "n_ticks",
                   "num_windows", "stream_speedup_vs_regather"}
+FLEET_BACKEND_KEYS = {"workers", "loop_tick_us", "mux_tick_us",
+                      "tick_speedup", "loop_dispatches_per_tick",
+                      "mux_dispatches_per_tick", "dispatch_reduction"}
 
 
 def result_files():
@@ -113,6 +119,42 @@ def test_vet_engine_windowed_and_streaming_sections_complete():
     assert STREAMING_KEYS <= set(payload["streaming"]), (
         "streaming section stale: rerun `python -m benchmarks.run "
         "--only vet_engine`")
+
+
+def fleet_payload():
+    path = os.path.join(RESULTS_DIR, "fleet.json")
+    if not os.path.exists(path):
+        pytest.skip("fleet.json not generated on this machine")
+    return load("fleet")
+
+
+def test_fleet_backend_sections_complete_and_finite():
+    payload = fleet_payload()
+    for section in [payload[b] for b in BACKENDS] + [payload["scaling_1024"]]:
+        missing = FLEET_BACKEND_KEYS - set(section)
+        assert not missing, (
+            f"fleet.json section stale: missing {sorted(missing)} — rerun "
+            f"`python -m benchmarks.run --only fleet`")
+        for key in FLEET_BACKEND_KEYS:
+            assert math.isfinite(section[key]) and section[key] > 0
+
+
+def test_fleet_dispatch_reduction_floor():
+    """The tentpole acceptance floor: a mux tick at 256+ workers must issue
+    at least 10x fewer engine dispatches than the per-stream tick loop.
+    Dispatch counts are exact (``VetEngine.dispatches``), not timings, so
+    this floor cannot flake on a loaded machine — a homogeneous 256-worker
+    fleet coalesces to one dispatch per tick (256x); anything under 10x
+    means the mux silently degenerated into per-stream dispatches."""
+    payload = fleet_payload()
+    assert payload["dispatch_reduction"] >= 10.0
+    for backend in BACKENDS:
+        assert payload[backend]["dispatch_reduction"] >= 10.0, backend
+    assert payload["scaling_1024"]["dispatch_reduction"] >= 10.0
+    # Heterogeneous fleets dispatch once per distinct window length, never
+    # once per stream.
+    mixed = payload["mixed_windows"]
+    assert mixed["max_dispatches_per_tick"] <= mixed["window_lengths"]
 
 
 def test_vet_engine_streaming_tick_is_incremental():

@@ -1,0 +1,411 @@
+"""Differential + scheduling suite for ``repro.fleet`` (the vet mux).
+
+The tentpole contract: a ``VetMux`` tick coalesces every registered stream's
+newly complete windows into shared shape-bucketed dispatches, and each
+stream's rows are *equal to what its own independent ``tick()`` would have
+computed* — bitwise on the numpy backend (the coalesced matrix runs the same
+row-independent scalar loop), 1e-5 on jax/pallas (vmap rows are independent;
+the backends' standing differential contract).  Every scenario in the bank
+is driven through the mux and through a per-stream oracle fleet in lockstep,
+comparing every tick's rows for every stream.
+
+Also locked here: the tick planner (budget backpressure, tenant fairness
+water-filling, staleness aging, ring-overrun urgency), dispatch-count
+coalescing (one dispatch per distinct window length per tick), engine-cache
+replay of whole fleets, churn bookkeeping, and the commit safety rails.
+"""
+
+import numpy as np
+import pytest
+
+from repro.engine import VetEngine, VetStream
+from repro.fleet import (
+    SCENARIOS,
+    StreamRequest,
+    VetMux,
+    build,
+    plan_tick,
+    play,
+)
+
+JITTED_BACKENDS = ("jax", "pallas")
+
+
+def oracle_fleet(scenario, backend):
+    """Independent per-stream VetStreams on a fresh engine (the pre-mux
+    path), stepped in lockstep with the scenario's events."""
+    engine = VetEngine(backend, buckets=64)
+    streams = {
+        s.stream_id: VetStream(engine, window=s.window, stride=s.stride,
+                               capacity=s.capacity)
+        for s in scenario.specs
+    }
+
+    def step(event):
+        for spec in event.joins:
+            streams[spec.stream_id] = VetStream(
+                engine, window=spec.window, stride=spec.stride,
+                capacity=spec.capacity)
+        for sid, chunk in event.chunks.items():
+            streams[sid].feed(chunk)
+        return {sid: st.tick() for sid, st in streams.items()}
+
+    return streams, step
+
+
+def assert_rows_match(got, ref, *, bitwise, context=""):
+    assert (got is None) == (ref is None), context
+    if ref is None:
+        return
+    assert got.workers == ref.workers, context
+    for name in ("vet", "ei", "oc", "pr"):
+        a, b = getattr(got, name), getattr(ref, name)
+        if bitwise:
+            np.testing.assert_array_equal(a, b, err_msg=context)
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-9,
+                                       err_msg=context)
+    np.testing.assert_array_equal(got.t, ref.t, err_msg=context)
+    np.testing.assert_array_equal(got.n, ref.n, err_msg=context)
+
+
+def drive_and_compare(name, backend, *, bitwise, **overrides):
+    scenario = build(name, **overrides)
+    mux = VetMux(VetEngine(backend, buckets=64))
+    oracle_streams, oracle_step = oracle_fleet(scenario, backend)
+    for spec in scenario.specs:
+        spec.register(mux)
+    for k, event in enumerate(scenario.events):
+        for spec in event.joins:
+            spec.register(mux)
+        for sid, chunk in event.chunks.items():
+            mux.feed(sid, chunk)
+        tick = mux.tick()
+        refs = oracle_step(event)
+        assert not tick.deferred  # no budget => full service every tick
+        for sid, ref in refs.items():
+            assert_rows_match(tick.results[sid], ref, bitwise=bitwise,
+                              context=f"{name} tick {k} stream {sid}")
+        for sid in event.leaves:  # churn: the oracle fleet mirrors leavers
+            mux.deregister(sid)
+            oracle_streams.pop(sid)
+    return mux
+
+
+# ---------------------------------------------------------- differential
+class TestMuxDifferential:
+    @pytest.mark.parametrize("name", sorted(SCENARIOS))
+    def test_numpy_every_tick_bitwise_equals_per_stream_oracle(self, name):
+        """Every scenario in the bank, every tick, every stream: bitwise."""
+        mux = drive_and_compare(name, "numpy", bitwise=True,
+                                n_workers=6, n_ticks=5, seed=11)
+        assert mux.stats.rows > 0
+
+    @pytest.mark.parametrize("name", ("uniform", "mixed_windows", "churn"))
+    def test_jax_every_tick_matches_oracle_1e5(self, name):
+        drive_and_compare(name, "jax", bitwise=False,
+                          n_workers=5, n_ticks=4, seed=7)
+
+    def test_pallas_matches_oracle_1e5(self):
+        drive_and_compare("uniform", "pallas", bitwise=False,
+                          n_workers=4, n_ticks=4, window=16, seed=3)
+
+    def test_budgeted_mux_converges_to_oracle_after_flush(self):
+        """Backpressure defers rows, never drops or reorders them: after a
+        final flush the fleet equals the unbudgeted oracle bitwise."""
+        scenario = build("uniform", n_workers=6, n_ticks=4, window=16, seed=5)
+        mux = VetMux(VetEngine("numpy", buckets=64), budget=4)
+        play(scenario, mux)
+        assert mux.stats.deferred > 0  # the budget actually bit
+        last = mux.flush()
+        oracle = VetEngine("numpy", buckets=64)
+        for spec in scenario.specs:
+            fed = np.concatenate([e.chunks[spec.stream_id]
+                                  for e in scenario.events
+                                  if spec.stream_id in e.chunks])
+            ref = oracle.vet_sliding(fed, window=spec.window,
+                                     stride=spec.stride)
+            assert_rows_match(last.results[spec.stream_id], ref, bitwise=True,
+                              context=spec.stream_id)
+
+    def test_fleet_vet_job_matches_mean_of_newest_window_vets(self):
+        scenario = build("skewed_stragglers", n_workers=6, n_ticks=4, seed=2)
+        mux = VetMux(VetEngine("numpy", buckets=64))
+        last = play(scenario, mux)[-1]
+        newest = [float(r.vet[-1]) for r in last.results.values()
+                  if r is not None]
+        assert last.vet_job == pytest.approx(float(np.mean(newest)))
+        # stragglers carry a heavier tail: fleet vet_job above the clean
+        # workers' median vet
+        clean = sorted(newest)[len(newest) // 2]
+        assert last.vet_job >= 1.0 and clean >= 1.0
+
+
+# ------------------------------------------------------------ coalescing
+class TestCoalescing:
+    def test_homogeneous_fleet_is_one_dispatch_per_tick(self):
+        eng = VetEngine("numpy", buckets=64)
+        mux = VetMux(eng)
+        play(build("uniform", n_workers=16, n_ticks=4, window=16, seed=0),
+             mux)
+        # every tick that moved rows issued exactly one dispatch
+        assert mux.stats.rows > 16
+        assert eng.dispatches == mux.stats.dispatches
+        assert mux.stats.dispatches <= 4  # <= one per tick, never per stream
+
+    def test_mixed_fleet_dispatches_once_per_window_length(self):
+        sc = build("mixed_windows", n_workers=9, n_ticks=4, seed=1)
+        n_lengths = len({s.window for s in sc.specs})
+        mux = VetMux(VetEngine("numpy", buckets=64))
+        ticks = play(sc, mux)
+        assert max(t.dispatches for t in ticks) == n_lengths
+        assert all(t.dispatches <= n_lengths for t in ticks)
+
+    def test_pow2_padding_bounds_compiled_shapes(self):
+        """Jitted backends see pow2 row counts only: deltas of 3 and 5 rows
+        share the padded shapes 4 and 8, not two fresh compiles."""
+        eng = VetEngine("jax", buckets=64)
+        mux = VetMux(eng)
+        for i in range(5):
+            mux.register(i, window=16, stride=8, capacity=128)
+        for i in range(3):  # only 3 of 5 streams have a window ready
+            mux.feed(i, np.full(16, 1e-3 * (i + 1)))
+        t1 = mux.tick()
+        assert t1.rows == 3 and t1.padded_rows == 1  # 3 -> 4
+        for i in range(3):  # one more window for the first three...
+            mux.feed(i, np.full(8, 2e-3 * (i + 1)))
+        for i in range(3, 5):  # ...and a first window for the last two
+            mux.feed(i, np.full(16, 3e-3 * (i + 1)))
+        t2 = mux.tick()
+        assert t2.rows == 5 and t2.padded_rows == 3  # 3+2 = 5 -> 8
+
+    def test_fleet_replay_is_served_from_the_engine_cache(self):
+        """Replaying the same fleet into the same engine re-issues zero
+        dispatches: the coalesced keys are content-pure."""
+        eng = VetEngine("numpy", buckets=64)
+        play(build("uniform", n_workers=4, n_ticks=4, window=16, seed=9),
+             VetMux(eng))
+        before = eng.dispatches
+        play(build("uniform", n_workers=4, n_ticks=4, window=16, seed=9),
+             VetMux(eng))
+        assert eng.dispatches == before
+        assert eng.cache_info().hits >= before
+
+    def test_quiet_streams_cost_no_dispatch(self):
+        eng = VetEngine("numpy", buckets=64)
+        mux = VetMux(eng)
+        mux.register("busy", window=16, stride=8)
+        mux.register("quiet", window=16, stride=8)
+        mux.feed("busy", np.linspace(1e-3, 2e-3, 32))
+        mux.tick()
+        d = eng.dispatches
+        r1 = mux.tick()  # nobody moved: no dispatch, results are reused
+        assert eng.dispatches == d
+        assert r1.results["quiet"] is None
+        assert r1.dispatches == 0 and r1.rows == 0
+
+
+# -------------------------------------------------------------- planner
+class TestTickPlanner:
+    def req(self, sid, pending, *, priority=0.0, tenant="default",
+            staleness=0, headroom=100):
+        return StreamRequest(sid, pending, priority, tenant, staleness,
+                             headroom)
+
+    def test_no_budget_serves_everything_in_priority_order(self):
+        plan = plan_tick([self.req("a", 2), self.req("b", 3, priority=1.0),
+                          self.req("z", 0)])
+        assert list(plan.serve) == ["b", "a"]  # z has nothing pending
+        assert plan.serve["b"] == 3 and not plan.deferred
+
+    def test_budget_caps_rows_and_defers_the_rest(self):
+        plan = plan_tick([self.req("a", 4), self.req("b", 4)], budget=5)
+        assert plan.total_rows == 5
+        assert plan.deferred and sum(plan.deferred.values()) == 3
+
+    def test_urgent_streams_served_in_full_even_past_budget(self):
+        plan = plan_tick([self.req("a", 4), self.req("u", 6, headroom=0)],
+                         budget=3)
+        assert plan.urgent == ("u",)
+        assert plan.serve["u"] == 6  # overrun risk beats the budget
+        assert "a" in plan.deferred
+
+    def test_equal_tenants_split_the_budget_evenly(self):
+        plan = plan_tick([self.req("a1", 10, tenant="a"),
+                          self.req("b1", 10, tenant="b")], budget=8)
+        assert plan.serve["a1"] == plan.serve["b1"] == 4
+
+    def test_tenant_weights_bias_the_split(self):
+        plan = plan_tick([self.req("a1", 12, tenant="a"),
+                          self.req("b1", 12, tenant="b")], budget=9,
+                         tenant_weights={"a": 2.0, "b": 1.0})
+        assert plan.serve["a1"] == 6 and plan.serve["b1"] == 3
+
+    def test_unused_share_flows_to_tenants_with_demand(self):
+        plan = plan_tick([self.req("a1", 2, tenant="a"),
+                          self.req("b1", 10, tenant="b")], budget=8)
+        assert plan.serve["a1"] == 2 and plan.serve["b1"] == 6
+
+    def test_staleness_out_ages_priority(self):
+        """A deferred low-priority stream eventually overtakes a hot one."""
+        hot = self.req("hot", 5, priority=2.0)
+        old = self.req("old", 5, priority=0.0, staleness=3)
+        plan = plan_tick([hot, old], budget=5)
+        assert list(plan.serve)[0] == "old"
+
+    def test_deterministic_tiebreak_is_registration_order(self):
+        plan = plan_tick([self.req("x", 3), self.req("y", 3)], budget=4)
+        assert list(plan.serve) == ["x", "y"]
+        assert plan.serve["x"] >= plan.serve["y"]
+
+    def test_duplicate_ids_rejected(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            plan_tick([self.req("a", 1), self.req("a", 1)])
+
+    def test_bad_weight_rejected(self):
+        with pytest.raises(ValueError, match="weight"):
+            plan_tick([self.req("a", 1, tenant="t")], budget=1,
+                      tenant_weights={"t": 0.0})
+
+
+# ---------------------------------------------------- mux aging/urgency
+class TestMuxScheduling:
+    def test_staleness_ages_deferred_streams_to_the_front(self):
+        """Under a tight budget with a hot high-priority stream, the cold
+        stream is served within a bounded number of ticks (no starvation)."""
+        eng = VetEngine("numpy", buckets=64)
+        mux = VetMux(eng, budget=2)
+        mux.register("hot", window=8, stride=4, capacity=256, priority=3.0)
+        mux.register("cold", window=8, stride=4, capacity=256)
+        rng = np.random.default_rng(0)
+        mux.feed("cold", rng.uniform(1e-3, 2e-3, 64))
+        served_cold_at = None
+        for k in range(6):
+            mux.feed("hot", rng.uniform(1e-3, 2e-3, 16))
+            tick = mux.tick()
+            if tick.serviced.get("cold"):
+                served_cold_at = k
+                break
+        assert served_cold_at is not None and served_cold_at <= 5
+
+    def test_overrun_pressure_forces_coalesced_service(self):
+        """A stream at the edge of its ring is served in full (urgent) and
+        never raises, even under a tiny budget."""
+        eng = VetEngine("numpy", buckets=64)
+        mux = VetMux(eng, budget=1)
+        mux.register("tight", window=8, stride=4, capacity=16)
+        mux.register("other", window=8, stride=4, capacity=256)
+        rng = np.random.default_rng(1)
+        other_times = rng.uniform(1e-3, 2e-3, 64)
+        tight_times = rng.uniform(1e-3, 2e-3, 160)
+        mux.feed("other", other_times)
+        # 10x the ring: mux.feed must tick (coalesced) instead of overrun
+        mux.feed("tight", tight_times)
+        last = mux.flush()
+        ref = VetEngine("numpy", buckets=64).vet_sliding(
+            tight_times, window=8, stride=4)
+        assert_rows_match(last.results["tight"], ref, bitwise=True)
+
+    def test_feed_requires_registration(self):
+        mux = VetMux(VetEngine("numpy", buckets=64))
+        with pytest.raises(KeyError, match="not registered"):
+            mux.feed("ghost", [1.0, 2.0])
+
+
+# ------------------------------------------------------------- lifecycle
+class TestMuxLifecycle:
+    def make_mux(self):
+        return VetMux(VetEngine("numpy", buckets=64))
+
+    def test_register_duplicate_rejected(self):
+        mux = self.make_mux()
+        mux.register("a", window=8)
+        with pytest.raises(ValueError, match="already registered"):
+            mux.register("a", window=8)
+
+    def test_register_needs_window_or_stream(self):
+        with pytest.raises(ValueError, match="window"):
+            self.make_mux().register("a")
+
+    def test_attached_stream_must_share_the_engine(self):
+        mux = self.make_mux()
+        alien = VetStream(VetEngine("numpy", buckets=64), window=8)
+        with pytest.raises(ValueError, match="share the mux engine"):
+            mux.register("a", stream=alien)
+        own = VetStream(mux.engine, window=8)
+        assert mux.register("b", stream=own) is own
+
+    def test_deregistered_stream_survives_standalone(self):
+        mux = self.make_mux()
+        mux.register("a", window=8, stride=4)
+        mux.feed("a", np.linspace(1e-3, 2e-3, 16))
+        t = mux.tick()
+        stream = mux.deregister("a")
+        assert "a" not in mux and len(mux) == 0
+        # the stream keeps its rows and keeps working on its own
+        before = stream.stats.vetted
+        stream.append(np.linspace(2e-3, 3e-3, 8))
+        res = stream.tick()
+        assert res.workers > t.results["a"].workers
+        assert stream.stats.vetted > before
+
+    def test_commit_rejects_stale_or_misshapen_deltas(self):
+        eng = VetEngine("numpy", buckets=64)
+        st = VetStream(eng, window=8, stride=4)
+        st.append(np.linspace(1e-3, 2e-3, 24))
+        delta = st.drain()
+        rows = eng.vet_batch(delta.matrix)
+        st.commit(delta, rows)
+        with pytest.raises(ValueError, match="stale delta"):
+            st.commit(delta, rows)  # already committed
+        st.append(np.linspace(2e-3, 3e-3, 8))
+        d2 = st.drain()
+        with pytest.raises(ValueError, match="result rows"):
+            st.commit(d2, rows)  # wrong row count for this delta
+
+    def test_commit_rejects_delta_drained_before_pending_window_amend(self):
+        """An amend that touches only *pending* windows leaves the vetted
+        watermark alone — the epoch rail must still reject the pre-amend
+        delta, or stale rows would splice silently and the stream would
+        diverge from the oracle forever (tumbling windows never rewind)."""
+        eng = VetEngine("numpy", buckets=64)
+        st = VetStream(eng, window=32, stride=32, capacity=256)
+        times = np.linspace(1e-3, 2e-3, 128)
+        st.append(times[:96])
+        st.tick()
+        st.append(times[96:])
+        stale = st.drain()
+        st.amend(100, [0.5])  # record only inside the pending window 3
+        with pytest.raises(ValueError, match="epoch"):
+            st.commit(stale, eng.vet_batch(stale.matrix))
+        # a fresh drain picks up the mutation and matches the oracle
+        res = st.tick()
+        mutated = times.copy()
+        mutated[100] = 0.5
+        ref = eng.vet_sliding(mutated, window=32, stride=32)
+        np.testing.assert_array_equal(res.vet, ref.vet)
+
+    def test_drain_is_side_effect_free(self):
+        eng = VetEngine("numpy", buckets=64)
+        st = VetStream(eng, window=8, stride=4)
+        st.append(np.linspace(1e-3, 2e-3, 24))
+        d1 = st.drain()
+        d2 = st.drain()
+        assert d1.start == d2.start and d1.count == d2.count
+        np.testing.assert_array_equal(d1.matrix, d2.matrix)
+        assert d1.key == d2.key
+        assert st.pending_windows == d1.count  # nothing advanced
+
+    def test_partial_drain_covers_the_stream_exactly_once(self):
+        eng = VetEngine("numpy", buckets=64)
+        st = VetStream(eng, window=8, stride=4, capacity=64)
+        times = np.linspace(1e-3, 2e-3, 40)
+        st.append(times)
+        seen = 0
+        while st.pending_windows:
+            d = st.drain(max_windows=2)
+            st.commit(d, eng.vet_batch(d.matrix))
+            seen += d.count
+        ref = eng.vet_sliding(times, window=8, stride=4)
+        assert seen == ref.workers
+        np.testing.assert_array_equal(st.collect().vet, ref.vet)

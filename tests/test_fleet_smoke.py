@@ -1,0 +1,57 @@
+"""Fast tier-1 smoke for the fleet path: <= 64 workers, numpy backend only.
+
+The full differential suite (``tests/test_fleet.py``) sweeps every scenario
+and backend; this file is the quick guard that keeps tier-1 cheap while
+still proving the three load-bearing properties end to end at a realistic
+fleet width: oracle equality, dispatch coalescing, and a working benchmark
+harness (tiny sizes, no artifacts written).
+"""
+
+import numpy as np
+
+import benchmarks.fleet as fleet_bench
+from repro.engine import VetEngine
+from repro.fleet import VetMux, build, play
+
+
+def test_64_worker_fleet_matches_batch_oracle_bitwise():
+    """One 64-stream uniform fleet: final mux rows == vet_sliding oracle."""
+    scenario = build("uniform", n_workers=64, n_ticks=3, window=16, seed=21)
+    eng = VetEngine("numpy", buckets=64)
+    last = play(scenario, VetMux(eng))[-1]
+    oracle = VetEngine("numpy", buckets=64)
+    for spec in scenario.specs:
+        fed = np.concatenate([e.chunks[spec.stream_id]
+                              for e in scenario.events])
+        ref = oracle.vet_sliding(fed, window=spec.window, stride=spec.stride)
+        got = last.results[spec.stream_id]
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_64_worker_fleet_is_one_dispatch_per_tick():
+    eng = VetEngine("numpy", buckets=64)
+    mux = VetMux(eng)
+    ticks = play(build("uniform", n_workers=64, n_ticks=3, window=16,
+                       seed=22), mux)
+    moving = [t for t in ticks if t.rows]
+    assert moving and all(t.dispatches == 1 for t in moving)
+    assert eng.dispatches == len(moving)  # never one per stream
+
+
+def test_benchmark_harness_smoke_tiny():
+    """The benchmark's measurement loop at toy size (8 workers, numpy):
+    payload complete, dispatch reduction == fleet width."""
+    out = fleet_bench.bench_fleet_tick(8, window=16, stride=8, chunk=8,
+                                       n_ticks=2, backend="numpy", seed=5)
+    assert out["loop_dispatches_per_tick"] == 8
+    assert out["mux_dispatches_per_tick"] == 1
+    assert out["dispatch_reduction"] == 8
+    assert np.isfinite(out["loop_tick_us"]) and np.isfinite(out["mux_tick_us"])
+
+
+def test_benchmark_mixed_windows_smoke_tiny():
+    out = fleet_bench.bench_mixed_windows(9, n_ticks=2, backend="numpy",
+                                          seed=6)
+    assert out["max_dispatches_per_tick"] <= out["window_lengths"] == 3
+    assert out["rows"] > 0

@@ -341,6 +341,89 @@ class TestStreamAPI:
         assert st.tick().workers == (128 - 32) // 8 + 1
 
 
+# ------------------------------------------------------- bounded history
+class TestBoundedHistory:
+    """``history=`` caps retained result rows (the ROADMAP follow-up for
+    indefinitely long streams): ticks return only the newest ``history``
+    windows, each still equal to its batch-oracle row, memory stays
+    O(capacity + history), and exposed snapshots survive eviction."""
+
+    def test_rows_equal_oracle_tail_every_tick(self):
+        times = stream_times(400, seed=12)
+        oracle = oracle_for(times, 32, 8)
+        st = VetStream(VetEngine("numpy", buckets=64), window=32, stride=8,
+                       capacity=128, history=5)
+        for k, res in drive(st, times, 16):
+            if k == 0:
+                continue
+            lo = st.first_retained
+            assert lo == max(0, k - 5)
+            assert res.workers == k - lo
+            for name in ("vet", "ei", "oc", "pr"):
+                np.testing.assert_array_equal(getattr(res, name),
+                                              getattr(oracle, name)[lo:k])
+        assert st.stats.evicted == oracle.workers - 5
+
+    def test_memory_stays_bounded_for_long_streams(self):
+        """200+ windows through a history=4 stream: row storage never grows
+        with stream length (an unbounded stream would need >= 200 slots)."""
+        st = VetStream(VetEngine("numpy", buckets=64), window=8, stride=4,
+                       capacity=64, history=4)
+        rng = np.random.default_rng(0)
+        for _ in range(50):
+            st.feed(rng.uniform(1e-3, 2e-3, 20))
+            st.tick()
+        assert st.complete_windows > 200
+        assert st.tick().workers == 4
+        assert st._rows["vet"].size <= 128  # physical storage, not windows
+
+    def test_exposed_snapshots_survive_eviction(self):
+        times = stream_times(320, seed=13)
+        st = VetStream(VetEngine("numpy", buckets=64), window=32, stride=8,
+                       capacity=512, history=6)
+        st.append(times[:120])
+        r1 = st.tick()
+        saved = r1.vet.copy()
+        st.append(times[120:])
+        st.tick()
+        np.testing.assert_array_equal(r1.vet, saved)
+
+    def test_amend_into_retained_rows_matches_mutated_oracle(self):
+        times = stream_times(256, seed=14)
+        st = VetStream(VetEngine("numpy", buckets=64), window=32, stride=8,
+                       capacity=256, history=6)
+        st.append(times)
+        st.tick()
+        mutated = times.copy()
+        mutated[250] *= 30.0
+        st.amend(250, mutated[250])
+        res = st.tick()
+        oracle = oracle_for(mutated, 32, 8)
+        lo = st.first_retained
+        np.testing.assert_array_equal(res.vet, oracle.vet[lo:])
+
+    def test_amend_below_retained_rows_revets_only_retained(self):
+        """Amending records whose affected windows were already evicted only
+        re-vets retained rows; evicted history is immutable."""
+        times = stream_times(256, seed=15)
+        st = VetStream(VetEngine("numpy", buckets=64), window=32, stride=8,
+                       capacity=256, history=4)
+        st.append(times)
+        st.tick()
+        vetted = st.stats.vetted
+        lo = st.first_retained
+        # record 10 is resident (capacity=256) but windows covering it were
+        # evicted long ago (first retained window starts at lo*8 >> 10+32)
+        st.amend(10, [times[10] * 50.0])
+        res = st.tick()
+        assert st.stats.vetted == vetted  # no retained row saw record 10
+        assert st.first_retained == lo and res.workers == 4
+
+    def test_constructor_validates_history(self):
+        with pytest.raises(ValueError, match="history"):
+            VetStream(VetEngine("numpy", buckets=64), window=8, history=0)
+
+
 # ----------------------------------------------- OnlineVet stream rewrite
 class TestOnlineVetStreaming:
     def make_times(self, n=640, seed=0):
@@ -408,6 +491,37 @@ class TestOnlineVetStreaming:
         with pytest.raises(ValueError, match="1-D"):
             OnlineVet(window=64,
                       engine=VetEngine("numpy", buckets=64)).feed(np.ones((4, 4)))
+
+    def test_tiny_history_cap_never_skips_snapshots_on_big_chunks(self):
+        """Regression: a cap far below the per-feed window count must not
+        break the chunked == record-at-a-time contract — feed folds after
+        every internal tick, before eviction can outrun it."""
+        times = self.make_times(640, seed=7)
+        snaps = {}
+        for label, chunk in (("chunked", 640), ("scalar", 1)):
+            ov = OnlineVet(window=64, engine=VetEngine("numpy", buckets=64),
+                           history=1)
+            out = []
+            for lo in range(0, times.size, chunk):
+                out.extend(ov.feed(times[lo:lo + chunk]))
+            snaps[label] = out
+        assert len(snaps["chunked"]) == (640 - 64) // 32 + 1
+        assert snaps["chunked"] == snaps["scalar"]
+
+    def test_history_capped_online_vet_emits_identical_snapshots(self):
+        """A history cap >= the per-feed window count is invisible to the
+        EMA: same snapshot list, bounded retained rows."""
+        times = self.make_times(640, seed=6)
+        ov_full = OnlineVet(window=64, engine=VetEngine("numpy", buckets=64))
+        ov_cap = OnlineVet(window=64, engine=VetEngine("numpy", buckets=64),
+                           history=8)
+        full, capped = [], []
+        for lo in range(0, times.size, 96):
+            full.extend(ov_full.feed(times[lo:lo + 96]))
+            capped.extend(ov_cap.feed(times[lo:lo + 96]))
+        assert capped == full and len(full) > 8
+        assert ov_cap.stream.first_retained > 0
+        assert ov_cap.stream.stats.evicted > 0
 
     def test_amend_refolds_corrected_windows_into_ema(self):
         """stream.amend() on an already-emitted window must surface in the
