@@ -1,0 +1,131 @@
+"""Sharded fleet estimation: one mux vs a ``ShardedVetMux`` at 1/2/4/8 shards.
+
+The single-mux fleet benchmark (``benchmarks/fleet.py``) proves coalescing:
+N per-stream dispatches collapse to one per window-length bucket per tick.
+This benchmark measures the next axis — *partitioning* that coalesced work
+across shards, each modeling one process/host with its own ``VetEngine``:
+
+- The workload is a heterogeneous fleet with 8 distinct window lengths
+  (the ``mixed_windows`` scenario shape at 256 and 1024 workers), where a
+  single mux pays 8 dispatches per tick.
+- The interesting numbers are the *per-shard maxima*: the most dispatches
+  and the most window rows any one shard (process) handles in a tick.  The
+  length-affine "pack" placement keeps same-length streams co-located, so
+  per-shard max dispatches fall as shards are added (8 -> 4 -> 2 -> 1 from
+  1 to 8 shards) and per-shard max rows fall with the worker split — each
+  model process does strictly less estimation work.
+- The guard rail is the fleet-total dispatch count: placement must not
+  shatter shape buckets, so the total stays within ``single-mux + K`` per
+  tick (here it stays exactly at the single-mux count).  Both bounds are
+  pinned on the committed artifact by
+  ``tests/test_benchmark_results_schema.py``.
+
+Engines run with the result cache disabled so every tick pays real compute;
+dispatch counts come from ``VetEngine.dispatches``/``MuxTick.dispatches``
+and are exact, not timed.  The first (compile) tick is excluded from the
+timed region.  In-process wall clock does not improve with shards — the
+win is the per-shard work distribution, which is what a multi-process
+deployment scales on.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Sequence, Tuple
+
+from repro.engine import VetEngine
+from repro.fleet import ShardedVetMux, VetMux, build
+
+from .common import emit, save_json
+
+# 8 distinct window lengths: a single mux pays one dispatch per length per
+# tick, so per-shard dispatch maxima can halve all the way down to 1 at 8
+# shards.
+WINDOW_LENGTHS: Tuple[int, ...] = (8, 12, 16, 24, 32, 48, 64, 96)
+
+
+def _drive(mux, scenario):
+    """Register + feed + tick a scenario, timing each tick individually."""
+    for spec in scenario.specs:
+        spec.register(mux)
+    ticks, walls = [], []
+    for event in scenario.events:
+        for spec in event.joins:
+            spec.register(mux)
+        for sid, chunk in event.chunks.items():
+            mux.feed(sid, chunk)
+        t0 = time.perf_counter()
+        ticks.append(mux.tick())
+        walls.append(time.perf_counter() - t0)
+        for sid in event.leaves:
+            mux.deregister(sid)
+    return ticks, walls
+
+
+def _tick_us(walls) -> float:
+    # First tick pays the jit compiles; report the steady-state mean.
+    steady = walls[1:] if len(walls) > 1 else walls
+    return sum(steady) / len(steady) * 1e6
+
+
+def bench_shard_scaling(workers: int, *,
+                        shards_list: Sequence[int] = (1, 2, 4, 8),
+                        n_lengths: int = 8, n_ticks: int = 3,
+                        backend: str = "jax", seed: int = 2) -> Dict:
+    """One worker-count's shard-scaling sweep (see module docstring)."""
+    windows = WINDOW_LENGTHS[:n_lengths]
+    scenario = build("mixed_windows", n_workers=workers, n_ticks=n_ticks,
+                     windows=windows, seed=seed)
+
+    # --- single-mux baseline: every length's bucket on one engine --------
+    single = VetMux(VetEngine(backend, buckets=64, cache_size=0))
+    ticks, walls = _drive(single, scenario)
+    moving = [t for t in ticks if t.rows]
+    out: Dict = {
+        "workers": workers,
+        "window_lengths": len(set(windows)),
+        "n_ticks": n_ticks,
+        "single_mux_dispatches_per_tick": max(t.dispatches for t in moving),
+        "single_mux_tick_us": _tick_us(walls),
+        "shards": {},
+    }
+
+    for k in shards_list:
+        smux = ShardedVetMux(
+            k, engines=[VetEngine(backend, buckets=64, cache_size=0)
+                        for _ in range(k)])
+        ticks, walls = _drive(smux, scenario)
+        moving = [t for t in ticks if t.rows]
+        entry = {
+            "shards": k,
+            "total_dispatches_per_tick": max(t.dispatches for t in moving),
+            "per_shard_max_dispatches_per_tick": max(
+                max(st.dispatches for st in t.shards) for t in moving),
+            "per_shard_max_rows_per_tick": max(
+                max(st.rows for st in t.shards) for t in moving),
+            "tick_us": _tick_us(walls),
+            "vet_job": moving[-1].vet_job,
+        }
+        out["shards"][str(k)] = entry
+        emit(f"fleet_shard/{backend}_{workers}w_k{k}", entry["tick_us"],
+             f"total_disp={entry['total_dispatches_per_tick']};"
+             f"shard_max_disp={entry['per_shard_max_dispatches_per_tick']};"
+             f"shard_max_rows={entry['per_shard_max_rows_per_tick']}")
+    return out
+
+
+def run():
+    out = {
+        "backend": "jax",
+        "n_lengths": len(WINDOW_LENGTHS),
+        "shards_list": [1, 2, 4, 8],
+        "w256": bench_shard_scaling(256, n_ticks=3),
+        "w1024": bench_shard_scaling(1024, n_ticks=2),
+    }
+    k1 = out["w1024"]["shards"]["1"]["per_shard_max_dispatches_per_tick"]
+    k4 = out["w1024"]["shards"]["4"]["per_shard_max_dispatches_per_tick"]
+    emit("fleet_shard/summary_1024w", 0.0,
+         f"per_shard_max_dispatches {k1}->{k4} from 1->4 shards;"
+         f"single={out['w1024']['single_mux_dispatches_per_tick']}")
+    save_json("fleet_shard", out)
+    return out

@@ -25,6 +25,7 @@ SUITES = [
     ("kernels_bench", "Framework: Pallas kernel micro-benchmarks"),
     ("vet_engine", "Framework: VetEngine backend comparison (numpy/jax/pallas)"),
     ("fleet", "Framework: VetMux coalesced fleet ticks vs per-stream loop"),
+    ("fleet_shard", "Framework: ShardedVetMux shard-scaling vs one mux"),
 ]
 
 

@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
-# Tier-1 CI: install test extras, run the streaming + fleet + windowed
-# vetting differential suites explicitly (with JUnit XML reports), then the
-# full pytest suite, then a fast VetEngine smoke benchmark (batch + windowed
-# + streaming sections: backend agreement, batched-vs-scalar speedup,
-# cached-tick cost, incremental-tick-vs-regather speedup).
+# Tier-1 CI: docs gate (README/ARCHITECTURE present, public-surface doctests,
+# quickstart's sharded stanza), install test extras, run the streaming +
+# fleet + sharded-fleet + windowed vetting differential suites explicitly
+# (with JUnit XML reports), then the full pytest suite, then a fast
+# VetEngine smoke benchmark (batch + windowed + streaming sections: backend
+# agreement, batched-vs-scalar speedup, cached-tick cost,
+# incremental-tick-vs-regather speedup).
 #
 # Usage: scripts/ci.sh [extra pytest args...]
 # JUnit XML lands in ${CI_REPORTS_DIR:-reports}/ for CI systems that ingest it.
@@ -12,6 +14,32 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 REPORTS_DIR="${CI_REPORTS_DIR:-reports}"
 mkdir -p "$REPORTS_DIR"
+
+# Docs gate: the repo ships its own map.  README.md and docs/ARCHITECTURE.md
+# must exist, every docstring example on the public estimation surface must
+# run (doctests on engine/ + fleet/ + the routed OnlineVet/VetController),
+# and the quickstart's sharded-fleet stanza must work end to end.
+echo "[ci] docs gate: README + ARCHITECTURE + doctests + quickstart stanza 6"
+for doc in README.md docs/ARCHITECTURE.md; do
+  if [ ! -f "$doc" ]; then
+    echo "[ci] FAIL: $doc is missing (the docs gate requires it)"
+    exit 1
+  fi
+done
+docs_status=0
+python -m pytest -q --doctest-modules \
+  --junitxml="$REPORTS_DIR/doctest.xml" \
+  src/repro/engine src/repro/fleet \
+  src/repro/core/online.py src/repro/sched/straggler.py \
+  || docs_status=$?
+if [ "$docs_status" -ne 0 ]; then
+  echo "[ci] FAIL: public-surface doctests exited $docs_status"
+  exit "$docs_status"
+fi
+python examples/quickstart.py --stanza 6 || {
+  echo "[ci] FAIL: quickstart stanza 6 (sharded fleet) did not run"
+  exit 1
+}
 
 # Test extras: hypothesis powers the property suites; without it those tests
 # skip (importorskip), so an offline container still runs tier-1 green.
@@ -44,6 +72,18 @@ python -m pytest -q -x \
   tests/test_fleet_smoke.py \
   || fleet_status=$?
 
+# Sharded fleets: per-stream rows vs the single-mux oracle across the bank
+# and all backends, merged job-level vets, deterministic placement, the
+# scenario-bank edge cases, and the <= 64-worker / 2-shard numpy smoke.
+echo "[ci] sharded fleet: shard differential + scenario + smoke suites"
+shard_status=0
+python -m pytest -q -x \
+  --junitxml="$REPORTS_DIR/shard.xml" \
+  tests/test_fleet_shard.py \
+  tests/test_fleet_shard_smoke.py \
+  tests/test_fleet_scenarios.py \
+  || shard_status=$?
+
 # Windowed vetting next (same reasoning for the batched sliding/ragged path).
 echo "[ci] windowed vetting: differential + property + benchmark-smoke suites"
 windowed_status=0
@@ -65,6 +105,9 @@ python -m pytest -q \
   --ignore=tests/test_simulator_determinism.py \
   --ignore=tests/test_fleet.py \
   --ignore=tests/test_fleet_smoke.py \
+  --ignore=tests/test_fleet_shard.py \
+  --ignore=tests/test_fleet_shard_smoke.py \
+  --ignore=tests/test_fleet_scenarios.py \
   --ignore=tests/test_vet_windows.py \
   --ignore=tests/test_vet_windows_properties.py \
   --ignore=tests/test_benchmarks_smoke.py \
@@ -81,6 +124,10 @@ fi
 if [ "$fleet_status" -ne 0 ]; then
   echo "[ci] FAIL: fleet vetting suites exited $fleet_status"
   exit "$fleet_status"
+fi
+if [ "$shard_status" -ne 0 ]; then
+  echo "[ci] FAIL: sharded fleet suites exited $shard_status"
+  exit "$shard_status"
 fi
 if [ "$windowed_status" -ne 0 ]; then
   echo "[ci] FAIL: windowed vetting suites exited $windowed_status"

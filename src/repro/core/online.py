@@ -47,6 +47,29 @@ class OnlineVet:
     ``engine`` is the backing ``VetEngine``; when omitted, a shared default
     (jax backend, ``buckets`` as given) is used.  With an explicit engine its
     own bucketing configuration wins over ``buckets``.
+
+    Args:
+        window: records per estimate (>= 64; refresh every ``window // 2``).
+        alpha: EMA weight for the newest window's vet.
+        buckets: change-point bucketing for the default engine.
+        engine: explicit backing ``VetEngine``.
+        history: cap on retained per-window result rows (clamped up to the
+            stream's geometric safe minimum; pass one for long-lived
+            estimators).
+
+    Raises:
+        ValueError: ``window < 64``.
+
+    Example::
+
+        >>> import numpy as np
+        >>> from repro.engine import VetEngine
+        >>> ov = OnlineVet(window=64, engine=VetEngine("numpy", buckets=16))
+        >>> snaps = ov.feed(np.linspace(1e-3, 2e-3, 200))
+        >>> len(snaps)                 # windows complete at 64, 96, ... 192
+        5
+        >>> ov.snapshot is snaps[-1] and snaps[-1].n_window == 64
+        True
     """
 
     def __init__(self, window: int = 512, alpha: float = 0.3,
@@ -91,6 +114,25 @@ class OnlineVet:
         completed.  Chunks are appended vectorized; completions are computed
         arithmetically by the backing stream, so chunked and record-at-a-time
         feeds emit identical snapshot lists.
+
+        Args:
+            times: 1-D chunk of record times (seconds), any size.
+
+        Returns:
+            The ``OnlineVetSnapshot`` list this chunk completed (possibly
+            empty), oldest first.
+
+        Example::
+
+            >>> import numpy as np
+            >>> from repro.engine import VetEngine
+            >>> ov = OnlineVet(window=64,
+            ...                engine=VetEngine("numpy", buckets=16))
+            >>> ov.feed(np.linspace(1e-3, 2e-3, 63))    # one short of a window
+            []
+            >>> [round(s.smoothed_vet, 6) == round(s.vet, 6)
+            ...  for s in ov.feed([2e-3])]              # first fold: EMA seed
+            [True]
         """
         out: List[OnlineVetSnapshot] = []
         # The stream sub-chunks by its ring budget; the pressure hook folds
@@ -143,6 +185,27 @@ class OnlineVet:
         (cached across ticks while the buffer is unchanged) over the newest
         ``self.window`` records.  Raises if fewer than ``window`` records
         are buffered.
+
+        Args:
+            window: sub-window length (>= 2, <= buffered records).
+            stride: records between sub-window starts.
+
+        Returns:
+            ``BatchVetResult`` over the sub-windows, oldest first.
+
+        Raises:
+            ValueError: when fewer than ``window`` records are buffered
+                (or the geometry is invalid).
+
+        Example::
+
+            >>> import numpy as np
+            >>> from repro.engine import VetEngine
+            >>> ov = OnlineVet(window=64,
+            ...                engine=VetEngine("numpy", buckets=16))
+            >>> _ = ov.feed(np.linspace(1e-3, 2e-3, 96))
+            >>> ov.sliding(window=32, stride=16).workers
+            3
         """
         return self.engine.vet_sliding(self._stream.latest(self.window),
                                        window=window, stride=stride)

@@ -212,6 +212,20 @@ class VetEngine:
         this engine (``repro.engine.stream.VetStream``) key their incremental
         dispatches on an epoch-tagged rolling fingerprint instead and expose
         their own ``invalidate()``/``amend()`` hooks.
+
+        Args:
+            buffer: the mutated array (pre- or post-mutation content).
+
+        Returns:
+            Number of cache entries evicted.
+
+        Example::
+
+            >>> eng = VetEngine("numpy", buckets=64)
+            >>> buf = np.linspace(1e-3, 2e-3, 16)
+            >>> _ = eng.vet_batch(buf)
+            >>> eng.invalidate(buf)    # evicts the entry computed from buf
+            1
         """
         arr = np.asarray(buffer)
         digests = {self._digest(arr)}
@@ -254,10 +268,32 @@ class VetEngine:
         return res
 
     def cache_info(self) -> CacheInfo:
+        """Result-cache counters (hits/misses/size/max_size).
+
+        Example::
+
+            >>> eng = VetEngine("numpy", buckets=64)
+            >>> times = np.linspace(1e-3, 2e-3, 16)
+            >>> _ = eng.vet_batch(times)       # miss: computes
+            >>> _ = eng.vet_batch(times)       # hit: served from cache
+            >>> ci = eng.cache_info()
+            >>> (ci.hits, ci.misses, ci.size)
+            (1, 1, 1)
+        """
         return CacheInfo(hits=self._cache_hits, misses=self._cache_misses,
                          size=len(self._cache), max_size=self._cache_size)
 
     def cache_clear(self) -> None:
+        """Drop every memoized result and reset the hit/miss counters.
+
+        Example::
+
+            >>> eng = VetEngine("numpy", buckets=64)
+            >>> _ = eng.vet_batch(np.linspace(1e-3, 2e-3, 16))
+            >>> eng.cache_clear()
+            >>> eng.cache_info().size
+            0
+        """
         self._cache.clear()
         self._cache_hits = 0
         self._cache_misses = 0
@@ -270,6 +306,27 @@ class VetEngine:
         For the ``jax``/``pallas`` backends the whole batch is a single
         compiled call; ``numpy`` loops the scalar reference per row.
         Results are memoized on the matrix fingerprint.
+
+        Args:
+            times_matrix: (workers, window) array-like of per-record times
+                in seconds (coerced to float64); 1-D means one worker.
+
+        Returns:
+            ``BatchVetResult`` of (workers,) host arrays, frozen
+            (read-only — cache hits alias the stored arrays).
+
+        Raises:
+            ValueError: when the input has more than two dimensions.
+
+        Example::
+
+            >>> eng = VetEngine("numpy", buckets=64)
+            >>> m = np.linspace(1e-3, 2e-3, 32).reshape(2, 16)
+            >>> res = eng.vet_batch(m)
+            >>> res.workers, res.vet.shape
+            (2, (2,))
+            >>> bool((res.vet >= 1.0).all())   # PR/EI: 1 == nothing left
+            True
         """
         m = np.atleast_2d(np.asarray(times_matrix, dtype=np.float64))
         if m.ndim != 2:
@@ -303,6 +360,15 @@ class VetEngine:
         slices its rows back out) keeps compiles O(log max-delta) instead
         of one per distinct size.  Returns ``(matrix, padding_rows)``;
         the numpy backend (no compile cache) never pads.
+
+        Example::
+
+            >>> padded, extra = VetEngine("jax").pad_rows_pow2(
+            ...     np.ones((5, 8)))
+            >>> padded.shape[0], extra
+            (8, 3)
+            >>> VetEngine("numpy").pad_rows_pow2(np.ones((5, 8)))[1]
+            0
         """
         n = matrix.shape[0]
         if self.backend == "numpy" or n <= 1:
@@ -315,7 +381,22 @@ class VetEngine:
                 pad - n)
 
     def vet_one(self, times) -> VetResult:
-        """Scalar convenience wrapper: one profile through the batched path."""
+        """Scalar convenience wrapper: one profile through the batched path.
+
+        Args:
+            times: 1-D array-like of one profile's record times (seconds).
+
+        Returns:
+            The scalar ``repro.core.vet.VetResult`` container (0-dim
+            arrays; ``float()``/``int()`` them for Python scalars).
+
+        Example::
+
+            >>> r = VetEngine("numpy", buckets=64).vet_one(
+            ...     np.linspace(1e-3, 2e-3, 16))
+            >>> float(r.vet) >= 1.0 and r.n == 16
+            True
+        """
         return self.vet_batch(np.atleast_1d(np.asarray(times))[None, :]).task(0)
 
     def vet_many(self, profiles: Sequence) -> BatchVetResult:
@@ -324,6 +405,25 @@ class VetEngine:
         Equal-length profiles are grouped and vetted in one batched call per
         distinct length; results come back in input order.  This is the entry
         point for controllers whose per-worker buffers fill unevenly.
+
+        Args:
+            profiles: sequence of 1-D array-likes, one per worker (record
+                counts may differ).
+
+        Returns:
+            ``BatchVetResult`` in input order; ``n`` carries each worker's
+            record count.
+
+        Raises:
+            ValueError: on an empty profile list.
+
+        Example::
+
+            >>> eng = VetEngine("numpy", buckets=64)
+            >>> res = eng.vet_many([np.linspace(1e-3, 2e-3, 12),
+            ...                     np.linspace(1e-3, 2e-3, 20)])
+            >>> res.n.tolist()       # input order, per-worker counts
+            [12, 20]
         """
         arrs = [np.atleast_1d(np.asarray(p, dtype=np.float64)).ravel()
                 for p in profiles]
@@ -371,6 +471,29 @@ class VetEngine:
         (num_windows, window) matrix is materialized with one vectorized
         gather and vetted by a single ``vet_batch`` dispatch.  Row ``k`` of
         the result is window ``k`` in stream order.
+
+        Args:
+            times: 1-D record-time stream.
+            window: records per window (>= 2).
+            stride: records between window starts (>= 1).
+
+        Returns:
+            ``BatchVetResult`` with one row per complete window.
+
+        Raises:
+            ValueError: empty stream, ``window < 2``, ``stride < 1``, or
+                ``window`` longer than the stream.
+
+        Example::
+
+            >>> eng = VetEngine("numpy", buckets=64)
+            >>> times = np.linspace(1e-3, 2e-3, 32)
+            >>> eng.vet_sliding(times, window=16, stride=8).workers
+            3
+            >>> eng.vet_sliding(times[:8], window=16)
+            Traceback (most recent call last):
+                ...
+            ValueError: window (16) exceeds the stream length (8); buffer at least one full window of records before vetting
         """
         t = self._as_stream(times)
         window = int(window)
@@ -403,6 +526,26 @@ class VetEngine:
         ``vet_batch`` dispatch per distinct length — and results come back in
         input order.  This is the ragged-window entry point the fig6/fig8
         style "vet every sub-window of a stream" analyses route through.
+
+        Args:
+            times: 1-D record-time stream.
+            slices: ``(lo, hi)`` half-open pairs (or step-1 ``slice``
+                objects) into the stream, each covering >= 2 records.
+
+        Returns:
+            ``BatchVetResult`` with one row per slice, in input order.
+
+        Raises:
+            ValueError: empty slice list, out-of-bounds or too-short
+                windows, or a stepped slice.
+
+        Example::
+
+            >>> eng = VetEngine("numpy", buckets=64)
+            >>> times = np.linspace(1e-3, 2e-3, 16)
+            >>> res = eng.vet_windows(times, [(0, 12), (4, 16), (0, 16)])
+            >>> res.workers, res.n.tolist()
+            (3, [12, 12, 16])
         """
         t = self._as_stream(times)
         bounds = self._normalize_slices(slices, t.size)
@@ -443,7 +586,15 @@ class VetEngine:
         return self._vet_many_impl([t[lo:hi] for lo, hi in bounds])
 
     def vet_job(self, profiles: Sequence) -> float:
-        """Mean per-task vet over ragged profiles (paper §4.4)."""
+        """Mean per-task vet over ragged profiles (paper §4.4).
+
+        Example::
+
+            >>> eng = VetEngine("numpy", buckets=64)
+            >>> eng.vet_job([np.linspace(1e-3, 2e-3, 12),
+            ...              np.linspace(1e-3, 2e-3, 20)]) >= 1.0
+            True
+        """
         return self.vet_many(profiles).vet_job
 
 

@@ -263,6 +263,24 @@ class VetStream:
         caller may append at most ``capacity - window - stride + 1`` records
         before an unvetted window falls out of the ring (``tick`` then
         raises).  Use ``feed`` to have the stream manage that budget itself.
+
+        Args:
+            times: 1-D chunk of record times (seconds).
+
+        Returns:
+            Number of records appended (the chunk size).
+
+        Raises:
+            ValueError: on a multi-dimensional chunk.
+
+        Example::
+
+            >>> eng = VetEngine("numpy", buckets=64)
+            >>> s = VetStream(eng, window=8, stride=4, capacity=32)
+            >>> s.append(np.linspace(1e-3, 2e-3, 16))
+            16
+            >>> s.pending_windows      # windows 0..2 complete, unvetted
+            3
         """
         arr = self._coerce(times)
         if arr.size == 0:
@@ -292,6 +310,25 @@ class VetStream:
         tick's rows into its EMA before eviction can drop them.  The hook
         must advance the vetted watermark (tick this stream somehow) or the
         feed cannot make progress.
+
+        Args:
+            times: 1-D chunk of record times, arbitrarily large.
+            on_pressure: zero-arg hook run in place of the forced tick.
+
+        Returns:
+            Number of records appended (the chunk size).
+
+        Raises:
+            RuntimeError: when ``on_pressure`` fails to vet this stream.
+
+        Example::
+
+            >>> eng = VetEngine("numpy", buckets=64)
+            >>> s = VetStream(eng, window=8, stride=4, capacity=16)
+            >>> s.feed(np.linspace(1e-3, 2e-3, 100))   # 6x the ring
+            100
+            >>> s.tick().workers       # no window was ever lost
+            24
         """
         on_pressure = self.tick if on_pressure is None else on_pressure
         arr = self._coerce(times)
@@ -326,6 +363,17 @@ class VetStream:
 
         Raises ``ValueError`` if the oldest unvetted window's records were
         already overwritten in the ring (appends outran ``capacity``).
+
+        Example::
+
+            >>> eng = VetEngine("numpy", buckets=64)
+            >>> s = VetStream(eng, window=8, stride=4, capacity=32)
+            >>> _ = s.append(np.linspace(1e-3, 2e-3, 16))
+            >>> delta = s.drain()
+            >>> (delta.start, delta.count, delta.matrix.shape)
+            (0, 3, (3, 8))
+            >>> s.pending_windows      # side-effect free: still pending
+            3
         """
         n_new = self.pending_windows
         if n_new <= 0:
@@ -363,6 +411,24 @@ class VetStream:
         equal the current vetted watermark, so a delta drained before an
         intervening ``commit``/``amend``/``invalidate`` is rejected instead
         of silently splicing stale rows.
+
+        Args:
+            delta: the ``StreamDelta`` returned by ``drain``.
+            rows: the engine's ``BatchVetResult`` for ``delta.matrix``.
+
+        Raises:
+            ValueError: stale delta (watermark or epoch mismatch) or a row
+                count that does not match the delta.
+
+        Example::
+
+            >>> eng = VetEngine("numpy", buckets=64)
+            >>> s = VetStream(eng, window=8, stride=4, capacity=32)
+            >>> _ = s.append(np.linspace(1e-3, 2e-3, 16))
+            >>> delta = s.drain()
+            >>> s.commit(delta, eng.vet_batch(delta.matrix))
+            >>> s.collect().workers    # rows spliced, watermark advanced
+            3
         """
         if delta.start != self._vetted:
             raise ValueError(
@@ -426,6 +492,17 @@ class VetStream:
 
         Raises ``ValueError`` if an unvetted window's records were already
         overwritten in the ring (appends outran ``capacity`` between ticks).
+
+        Example::
+
+            >>> eng = VetEngine("numpy", buckets=64)
+            >>> s = VetStream(eng, window=8, stride=4, capacity=32)
+            >>> _ = s.append(np.linspace(1e-3, 2e-3, 16))
+            >>> res = s.tick()         # one dispatch over the 3-window delta
+            >>> res.workers
+            3
+            >>> s.tick() is res        # no new records: zero dispatches
+            True
         """
         self._ticks += 1
         if self.complete_windows == 0:
@@ -485,6 +562,27 @@ class VetStream:
         ``history`` cap are gone and stay gone (nothing stale can be served
         from them).  Amending records that are no longer resident (or whose
         re-vettable windows already left the ring) raises.
+
+        Args:
+            start: absolute stream position of the first rewritten record.
+            values: the replacement record times.
+
+        Raises:
+            ValueError: a range outside the appended stream or before the
+                resident suffix, or an affected vetted window that is no
+                longer fully resident.
+
+        Example::
+
+            >>> eng = VetEngine("numpy", buckets=64)
+            >>> s = VetStream(eng, window=8, stride=8, capacity=32)
+            >>> _ = s.append(np.linspace(1e-3, 2e-3, 16))
+            >>> _ = s.tick()
+            >>> s.amend(12, [5e-3])        # record 12 sits in window 1 only
+            >>> s.pending_windows          # exactly that window re-vets
+            1
+            >>> s.tick().workers, s.consume_rewind()
+            (2, 1)
         """
         vals = np.atleast_1d(np.asarray(values, dtype=np.float64)).ravel()
         start = int(start)
@@ -538,6 +636,17 @@ class VetStream:
         left the ring keep their last computed values — they cannot be
         recomputed from evicted records.  Returns the number of window rows
         scheduled for re-vetting.
+
+        Example::
+
+            >>> eng = VetEngine("numpy", buckets=64)
+            >>> s = VetStream(eng, window=8, stride=4, capacity=32)
+            >>> _ = s.append(np.linspace(1e-3, 2e-3, 16))
+            >>> _ = s.tick()
+            >>> s.invalidate()         # "I changed the ring under you"
+            3
+            >>> s.tick().workers       # every resident window re-vetted
+            3
         """
         self._epoch += 1
         self._fp.update(b"|invalidate|")

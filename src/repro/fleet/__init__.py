@@ -26,6 +26,15 @@ This package is the layer between the streams and the engine:
   shows the mux cutting engine dispatches per fleet tick by the fleet size
   (>= 10x floor pinned in ``tests/test_benchmark_results_schema.py``) at
   256-1024 simulated workers.
+- ``ShardedVetMux`` (``repro.fleet.shard``) partitions a fleet across K
+  shard muxes — each with its own ``VetEngine``, modeling separate
+  processes/hosts — behind the same register/feed/tick/flush/stats surface:
+  deterministic placement (greedy bin-packing by expected delta size with
+  window-length affinity, or round-robin), job-budget water-filling across
+  shards (``schedule.split_budget``), and per-shard ``JobVet`` partials
+  merged into the job-level ``vet_job`` exactly as a cross-process reducer
+  would (``tests/test_fleet_shard.py`` locks rows to the single-mux oracle
+  and the merged vet_job to 1e-9).
 
 Routed consumers: ``repro.sched.straggler.VetController`` (one mux across
 all workers — ``decide()`` is one coalesced dispatch set instead of a
@@ -42,19 +51,26 @@ from .scenarios import (
     build,
     play,
 )
-from .schedule import StreamRequest, TickPlan, plan_tick
+from .schedule import StreamRequest, TickPlan, plan_tick, split_budget
+from .shard import JobVet, ShardTick, ShardedVetMux, job_reduce, merge_job
 
 __all__ = [
     "SCENARIOS",
     "FleetEvent",
     "FleetScenario",
+    "JobVet",
     "MuxStats",
     "MuxTick",
+    "ShardTick",
+    "ShardedVetMux",
     "StreamRequest",
     "StreamSpec",
     "TickPlan",
     "VetMux",
     "build",
+    "job_reduce",
+    "merge_job",
     "plan_tick",
     "play",
+    "split_budget",
 ]

@@ -153,6 +153,27 @@ class VetMux:
         ``history``) and let the mux create the stream on its engine, or pass
         an existing ``stream`` — which must already be bound to the mux's
         engine, because coalesced dispatches run on exactly one engine.
+
+        Args:
+            stream_id: any hashable fleet-unique id.
+            window / stride / capacity / history: ``VetStream`` geometry
+                (used only when ``stream`` is not given).
+            priority / tenant: planner inputs (see ``repro.fleet.schedule``).
+            stream: an existing stream to attach instead.
+
+        Returns:
+            The registered ``VetStream``.
+
+        Raises:
+            ValueError: duplicate id, missing ``window`` and ``stream``, or
+                an attached stream bound to a different engine.
+
+        Example::
+
+            >>> mux = VetMux(VetEngine("numpy", buckets=64))
+            >>> st = mux.register("w0", window=8, stride=4)
+            >>> st.window, len(mux), "w0" in mux
+            (8, 1, True)
         """
         if stream_id in self._members:
             raise ValueError(f"stream {stream_id!r} is already registered")
@@ -174,7 +195,18 @@ class VetMux:
 
     def deregister(self, stream_id: Hashable) -> VetStream:
         """Remove a stream (fleet churn); returns it for the caller to keep
-        using standalone — its retained rows and vetted watermark survive."""
+        using standalone — its retained rows and vetted watermark survive.
+
+        Raises:
+            KeyError: unknown ``stream_id``.
+
+        Example::
+
+            >>> mux = VetMux(VetEngine("numpy", buckets=64))
+            >>> st = mux.register("w0", window=8, stride=4)
+            >>> mux.deregister("w0") is st and len(mux) == 0
+            True
+        """
         member = self._members.pop(self._require(stream_id))
         return member.stream
 
@@ -210,6 +242,23 @@ class VetMux:
         budget is exhausted, the *whole mux* ticks (one coalesced dispatch
         set — every stream with pending windows benefits) instead of the
         stream paying a private scalar-sized dispatch.
+
+        Args:
+            stream_id: a registered stream.
+            times: 1-D chunk of record times, arbitrarily large.
+
+        Returns:
+            Number of records appended.
+
+        Raises:
+            KeyError: unknown ``stream_id``.
+
+        Example::
+
+            >>> mux = VetMux(VetEngine("numpy", buckets=64))
+            >>> _ = mux.register("w0", window=8, stride=4, capacity=16)
+            >>> mux.feed("w0", np.linspace(1e-3, 2e-3, 100))  # 6x the ring
+            100
         """
         return self.stream(stream_id).feed(times, on_pressure=self.tick)
 
@@ -217,6 +266,22 @@ class VetMux:
     def tick(self) -> MuxTick:
         """Drain every stream's newly complete windows through shared
         batched dispatches; see the module docstring for the three phases.
+
+        Returns:
+            The merged ``MuxTick``: per-stream retained results, service /
+            deferral maps, and this tick's dispatch/row counters.
+
+        Example::
+
+            >>> mux = VetMux(VetEngine("numpy", buckets=64))
+            >>> for sid in ("a", "b"):
+            ...     _ = mux.register(sid, window=8, stride=4)
+            ...     _ = mux.feed(sid, np.linspace(1e-3, 2e-3, 16))
+            >>> t = mux.tick()
+            >>> (t.rows, t.dispatches)     # 2 streams, ONE shared dispatch
+            (6, 1)
+            >>> t.results["a"].workers, t.vet_job >= 1.0
+            (3, True)
         """
         self._ticks += 1
         requests = [
@@ -287,7 +352,22 @@ class VetMux:
 
     def flush(self, max_ticks: int = 1_000_000) -> MuxTick:
         """Tick until no stream has deferred work (drain the backlog after a
-        burst, or before reading final fleet state); returns the last tick."""
+        burst, or before reading final fleet state); returns the last tick.
+
+        Raises:
+            RuntimeError: no convergence within ``max_ticks`` (new work
+                arriving concurrently).
+
+        Example::
+
+            >>> mux = VetMux(VetEngine("numpy", buckets=64), budget=2)
+            >>> _ = mux.register("w0", window=8, stride=4, capacity=64)
+            >>> _ = mux.feed("w0", np.linspace(1e-3, 2e-3, 40))
+            >>> mux.tick().deferred        # budget 2 of 9 pending rows
+            {'w0': 7}
+            >>> mux.flush().deferred       # backlog drained, nothing lost
+            {}
+        """
         tick = self.tick()
         while tick.deferred:
             max_ticks -= 1

@@ -28,6 +28,15 @@ Everything is deterministic: ties break on registration order, tenants
 iterate in sorted name order, and no randomness is involved — the same fleet
 state always yields the same plan (the scenario differential suites depend
 on this).
+
+Sharded fleets (``repro.fleet.shard.ShardedVetMux``) reuse the same
+machinery one level up: the *job-level* budget is first split across shards
+by the identical weighted water-filling (``split_budget`` — each shard's
+demand is its streams' total pending rows, unused share flows to shards
+that still have demand), and then each shard runs its own ``plan_tick``
+over its local streams with its allocated slice — so fairness applies
+twice, across shards and within each shard, and both levels stay
+deterministic.
 """
 
 from __future__ import annotations
@@ -35,7 +44,7 @@ from __future__ import annotations
 from collections import OrderedDict
 from typing import Dict, Hashable, List, Mapping, NamedTuple, Optional, Sequence, Tuple
 
-__all__ = ["StreamRequest", "TickPlan", "plan_tick"]
+__all__ = ["StreamRequest", "TickPlan", "plan_tick", "split_budget"]
 
 
 class StreamRequest(NamedTuple):
@@ -103,38 +112,25 @@ def plan_tick(
         if w <= 0:
             raise ValueError(f"tenant weight must be > 0, got {t!r}: {w}")
 
-    # Weighted water-filling over the non-urgent demand.
+    # Weighted water-filling over the non-urgent demand: per-tenant totals
+    # from the shared core, then each tenant's total fills its streams in
+    # rank order (same greedy order as the rounds it replaces).
     pool = max(0, int(budget) - sum(r.pending for r in urgent))
     alloc: Dict[Hashable, int] = {r.stream_id: 0 for r in rest}
     queues: Dict[str, List[StreamRequest]] = {}
     for r in rest:  # rest is already rank-sorted; queues inherit the order
         queues.setdefault(r.tenant, []).append(r)
-
-    def demand(t: str) -> int:
-        return sum(r.pending - alloc[r.stream_id] for r in queues[t])
-
-    while pool > 0:
-        active = [t for t in sorted(queues) if demand(t) > 0]
-        if not active:
-            break
-        total_w = sum(weights.get(t, 1.0) for t in active)
-        shares = {t: int(pool * weights.get(t, 1.0) / total_w)
-                  for t in active}
-        for i in range(pool - sum(shares.values())):  # remainder, round-robin
-            shares[active[i % len(active)]] += 1
-        granted = 0
-        for t in active:
-            give = shares[t]
-            for r in queues[t]:
-                if give <= 0:
-                    break
-                take = min(r.pending - alloc[r.stream_id], give)
-                alloc[r.stream_id] += take
-                give -= take
-                granted += take
-        if granted == 0:
-            break
-        pool -= granted
+    tenants = sorted(queues)
+    totals = _waterfill(pool,
+                        [sum(r.pending for r in queues[t]) for t in tenants],
+                        [weights.get(t, 1.0) for t in tenants])
+    for t, total in zip(tenants, totals):
+        for r in queues[t]:
+            if total <= 0:
+                break
+            take = min(r.pending, total)
+            alloc[r.stream_id] = take
+            total -= take
 
     for r in rest:  # global rank order, after the urgent block
         if alloc[r.stream_id] > 0:
@@ -143,3 +139,90 @@ def plan_tick(
                 for r in rest if r.pending - alloc[r.stream_id] > 0}
     return TickPlan(serve=serve, deferred=deferred,
                     urgent=tuple(r.stream_id for r in urgent))
+
+
+def _waterfill(pool: int, demands: Sequence[int],
+               weights: Sequence[float]) -> List[int]:
+    """The shared integer water-filling core (both fairness levels use it:
+    ``plan_tick`` across tenants, ``split_budget`` across shards).
+
+    Rounds of demand-capped proportional shares: each round every index
+    with unmet demand gets ``pool * w_i / sum(active w)`` (integer floor,
+    remainder round-robin in index order), grants are capped at remaining
+    demand, unused share flows back into the pool, and rounds repeat until
+    the pool or the demand is exhausted.  Deterministic; ties break on
+    index order (callers pass keys pre-sorted).
+    """
+    alloc = [0] * len(demands)
+    while pool > 0:
+        active = [i for i in range(len(demands)) if demands[i] > alloc[i]]
+        if not active:
+            break
+        total_w = sum(weights[i] for i in active)
+        shares = {i: int(pool * weights[i] / total_w) for i in active}
+        for j in range(pool - sum(shares.values())):  # remainder, round-robin
+            shares[active[j % len(active)]] += 1
+        granted = 0
+        for i in active:
+            take = min(demands[i] - alloc[i], shares[i])
+            alloc[i] += take
+            granted += take
+        if granted == 0:
+            break
+        pool -= granted
+    return alloc
+
+
+def split_budget(
+    budget: int,
+    demands: Sequence[int],
+    *,
+    weights: Optional[Sequence[float]] = None,
+) -> List[int]:
+    """Water-fill an integer row ``budget`` across shards.
+
+    The shard-level half of the two-level fairness scheme (see the module
+    docstring): ``demands[k]`` is shard ``k``'s total pending window rows and
+    the returned ``alloc[k]`` is its slice of the job budget, never above its
+    demand.  Same rules as the per-tenant split inside ``plan_tick``: each
+    round every shard with unmet demand gets its weighted proportional share
+    (integer floor, remainder round-robin in shard order), unused share flows
+    back into the pool, and rounds repeat until the budget or the demand is
+    exhausted.  Deterministic: no randomness, ties break on shard index.
+
+    Args:
+        budget: job-level window-row cap for one tick (values < 0 clamp
+            to 0).
+        demands: per-shard pending window rows.
+        weights: optional per-shard bias (default: equal).  Must be > 0 and
+            match ``len(demands)``.
+
+    Returns:
+        Per-shard integer allocations, ``0 <= alloc[k] <= demands[k]`` and
+        ``sum(alloc) == min(budget, sum(demands))``.
+
+    Raises:
+        ValueError: on a non-positive weight or a weight/demand length
+            mismatch.
+
+    Example::
+
+        >>> split_budget(8, [10, 10])
+        [4, 4]
+        >>> split_budget(8, [2, 10])       # unused share flows to demand
+        [2, 6]
+        >>> split_budget(9, [12, 12], weights=[2.0, 1.0])
+        [6, 3]
+        >>> split_budget(100, [3, 0, 1])   # never above demand
+        [3, 0, 1]
+    """
+    k = len(demands)
+    if weights is None:
+        weights = [1.0] * k
+    if len(weights) != k:
+        raise ValueError(
+            f"weights length {len(weights)} != demands length {k}")
+    for i, w in enumerate(weights):
+        if w <= 0:
+            raise ValueError(f"shard weight must be > 0, got shard {i}: {w}")
+    return _waterfill(max(0, int(budget)), demands, weights)

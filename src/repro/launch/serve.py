@@ -24,7 +24,7 @@ import numpy as np
 
 from ..configs import get_config
 from ..engine import BatchVetResult, VetEngine, default_engine
-from ..fleet import VetMux
+from ..fleet import ShardedVetMux
 from ..models import decode_step, init_cache, init_params, prefill
 from ..profiling import RecordProfiler
 
@@ -60,6 +60,7 @@ def serve(
     greedy: bool = True,
     verbose: bool = True,
     engine: Optional[VetEngine] = None,
+    shards: int = 1,
 ) -> ServeResult:
     cfg = get_config(cfg_or_name) if isinstance(cfg_or_name, str) else cfg_or_name
     if not cfg.supports_decode:
@@ -81,14 +82,19 @@ def serve(
     tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
 
     prof = RecordProfiler(unit=record_unit)
-    # Live window snapshots: this worker's stream registered in a mux and
-    # ticked as unit-records complete, so each tick vets only the windows
-    # the last unit finished through the fleet's coalesced dispatch path (a
-    # multi-worker deployment registers every decode worker in the same mux;
-    # the snapshot windows are bucket-free at this size, so the stream
-    # engine needs no size-adapted bucket count).
-    mux = VetMux(engine if engine is not None
-                 else default_engine("jax", buckets=64))
+    # Live window snapshots: this worker's stream registered in a fleet mux
+    # and ticked as unit-records complete, so each tick vets only the
+    # windows the last unit finished through the fleet's coalesced dispatch
+    # path (a multi-worker deployment registers every decode worker in the
+    # same mux; the snapshot windows are bucket-free at this size, so the
+    # stream engine needs no size-adapted bucket count).  The mux is the
+    # sharded fleet entry point — ``shards=1`` (one local decode worker) is
+    # a single shard, and a multi-host deployment raises ``shards`` so each
+    # serving process keeps its own engine while the dashboard reads the
+    # shard-merged job reduction (``tick.vet_job``).
+    mux = ShardedVetMux(shards,
+                        engine=(engine if engine is not None
+                                else default_engine("jax", buckets=64)))
     # The drift view keeps the newest _SNAPSHOT_HISTORY windows: plenty for
     # any one generation, bounded for a serve loop that lives forever.
     stream = mux.register("decode", window=_SNAPSHOT_WINDOW,

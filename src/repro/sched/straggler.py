@@ -32,7 +32,7 @@ import numpy as np
 
 from ..core import ks_2samp
 from ..engine import VetEngine, default_engine
-from ..fleet import VetMux
+from ..fleet import ShardedVetMux, VetMux
 
 __all__ = ["SchedulerDecision", "VetController"]
 
@@ -52,6 +52,31 @@ class VetController:
     feed() per-worker record times; decide() returns the recommended worker
     count and straggler set.  Hysteresis: only moves one step per decision,
     and only when the vet signal clears the deadband.
+
+    Args:
+        n_workers: initial worker count (one stream per worker).
+        min_workers / max_workers: clamp for the W-rule recommendation.
+        window_records: records per vetting window.
+        vet_high / vet_low: shrink/grow hysteresis deadband on ``vet_job``.
+        straggler_pvalue / straggler_ratio: KS confirmation threshold and
+            the vet-outlier multiple that nominates a straggler candidate.
+        engine: backing ``VetEngine`` (shared default when omitted).
+        shards: opt-in fleet sharding — with ``shards > 1`` estimation
+            routes through a ``ShardedVetMux`` (``engine`` is the template
+            for the per-shard engines, each shard modeling one process) and
+            ``decide()`` reads the shard-merged job reduction; with the
+            default ``1`` a plain single ``VetMux`` is used.
+
+    Example::
+
+        >>> import numpy as np
+        >>> ctl = VetController(4, engine=VetEngine("numpy", buckets=64),
+        ...                     shards=2)
+        >>> for w in range(4):
+        ...     ctl.feed(w, np.linspace(1e-3, 2e-3, 64))
+        >>> d = ctl.decide()
+        >>> d.target_workers <= 4 and len(d.worker_vets) == 4
+        True
     """
 
     def __init__(
@@ -66,6 +91,7 @@ class VetController:
         straggler_pvalue: float = 0.01,
         straggler_ratio: float = 1.5,
         engine: Optional[VetEngine] = None,
+        shards: int = 1,
     ):
         self.n_workers = n_workers
         self.min_workers = min_workers
@@ -78,7 +104,13 @@ class VetController:
         self.engine = engine if engine is not None else default_engine("jax")
         # One mux across the whole worker fleet: decide() drains every
         # worker's newly complete windows in one coalesced dispatch set.
-        self.mux = VetMux(self.engine)
+        # With shards > 1 the fleet is partitioned across shard muxes (one
+        # engine each — the cross-process scaling path) and decide() merges
+        # the per-shard reductions; the decision logic is identical.
+        if int(shards) > 1:
+            self.mux = ShardedVetMux(int(shards), engine=self.engine)
+        else:
+            self.mux = VetMux(self.engine)
         for i in range(n_workers):
             self._register(i)
 
@@ -93,19 +125,53 @@ class VetController:
                           capacity=4 * self.window, history=8)
 
     def feed(self, worker_id: int, record_times: Sequence[float]) -> None:
-        # O(chunk) ingest: the mux only ticks mid-feed if overrun protection
-        # forces it (coalesced even then); estimation otherwise waits for
-        # decide().
+        """Append one worker's newly observed record times (seconds).
+
+        O(chunk) ingest: the mux only ticks mid-feed if overrun protection
+        forces it (coalesced even then); estimation otherwise waits for
+        ``decide()``.  Unknown workers are auto-registered (elastic fleets).
+
+        Example::
+
+            >>> ctl = VetController(1, engine=VetEngine("numpy", buckets=64))
+            >>> ctl.feed(0, np.linspace(1e-3, 2e-3, 16))
+            >>> ctl.feed(7, [1e-3])          # a brand-new worker joins
+            >>> len(ctl.mux)
+            2
+        """
         if worker_id not in self.mux:
             self._register(worker_id)
         self.mux.feed(worker_id,
                       np.asarray(record_times, dtype=np.float64).ravel())
 
     def ready(self) -> bool:
+        """True once every worker has the 32 records ``decide`` needs.
+
+        Example::
+
+            >>> ctl = VetController(1, engine=VetEngine("numpy", buckets=64))
+            >>> ctl.ready()
+            False
+            >>> ctl.feed(0, np.linspace(1e-3, 2e-3, 32))
+            >>> ctl.ready()
+            True
+        """
         return all(self.mux.stream(i).total_records >= 32
                    for i in self.mux.ids())
 
     def decide(self) -> SchedulerDecision:
+        """One coalesced estimation pass -> a concurrency recommendation.
+
+        Ticks the fleet mux (only workers with newly complete windows cost
+        anything; warmup workers fall back to one memoized ``vet_many``),
+        flags KS-confirmed vet outliers as stragglers, and applies the
+        paper's W-rule with hysteresis to ``vet_job``.
+
+        Returns:
+            ``SchedulerDecision`` with ``target_workers``, ``stragglers``,
+            ``vet_job``, per-worker vets and a human-readable ``reason``
+            (``"insufficient data"`` until some worker has 32 records).
+        """
         ids = [i for i in self.mux.ids()
                if self.mux.stream(i).total_records >= 32]
         if not ids:
@@ -135,8 +201,17 @@ class VetController:
             else:
                 warmup.append(i)
         if warmup:
-            batch = self.engine.vet_many([profile(i) for i in warmup])
-            vets.update((i, float(v)) for i, v in zip(warmup, batch.vet))
+            # Group by backing engine: with shards= each shard's warmup
+            # profiles are vetted on that shard's own engine (one memoized
+            # vet_many per shard), preserving the per-process model —
+            # fleet-wide warmup never funnels through a single engine.
+            by_engine: Dict[int, tuple] = {}
+            for i in warmup:
+                eng = self.mux.stream(i).engine
+                by_engine.setdefault(id(eng), (eng, []))[1].append(i)
+            for eng, ids_ in by_engine.values():
+                batch = eng.vet_many([profile(i) for i in ids_])
+                vets.update((i, float(v)) for i, v in zip(ids_, batch.vet))
         vj = float(np.mean(list(vets.values())))
 
         # --- straggler detection: per-worker vet outliers confirmed by KS ---
@@ -171,4 +246,5 @@ class VetController:
         )
 
     def apply(self, decision: SchedulerDecision) -> None:
+        """Adopt a decision's worker count (the caller resizes the pool)."""
         self.n_workers = decision.target_workers

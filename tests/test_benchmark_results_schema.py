@@ -32,6 +32,7 @@ SCHEMAS = {
     "fleet": {"workers", "window", "stride", "chunk", "numpy", "jax",
               "pallas", "dispatch_reduction", "scaling_1024",
               "mixed_windows"},
+    "fleet_shard": {"backend", "n_lengths", "shards_list", "w256", "w1024"},
     "kernels_bench": {"changepoint", "flash", "ssd", "vet_engine",
                       "vet_engine_windowed", "vet_engine_streaming"},
     "fig1_gap": None,  # free-form payloads: presence + valid JSON only
@@ -50,6 +51,13 @@ STREAMING_KEYS = {"n_records", "window", "stride", "chunk", "n_ticks",
 FLEET_BACKEND_KEYS = {"workers", "loop_tick_us", "mux_tick_us",
                       "tick_speedup", "loop_dispatches_per_tick",
                       "mux_dispatches_per_tick", "dispatch_reduction"}
+FLEET_SHARD_SECTION_KEYS = {"workers", "window_lengths", "n_ticks",
+                            "single_mux_dispatches_per_tick",
+                            "single_mux_tick_us", "shards"}
+FLEET_SHARD_ENTRY_KEYS = {"shards", "total_dispatches_per_tick",
+                          "per_shard_max_dispatches_per_tick",
+                          "per_shard_max_rows_per_tick", "tick_us",
+                          "vet_job"}
 
 
 def result_files():
@@ -155,6 +163,52 @@ def test_fleet_dispatch_reduction_floor():
     # once per stream.
     mixed = payload["mixed_windows"]
     assert mixed["max_dispatches_per_tick"] <= mixed["window_lengths"]
+
+
+def fleet_shard_payload():
+    path = os.path.join(RESULTS_DIR, "fleet_shard.json")
+    if not os.path.exists(path):
+        pytest.skip("fleet_shard.json not generated on this machine")
+    return load("fleet_shard")
+
+
+def test_fleet_shard_sections_complete_and_finite():
+    payload = fleet_shard_payload()
+    for name in ("w256", "w1024"):
+        section = payload[name]
+        missing = FLEET_SHARD_SECTION_KEYS - set(section)
+        assert not missing, (
+            f"fleet_shard.json {name} stale: missing {sorted(missing)} — "
+            f"rerun `python -m benchmarks.run --only fleet_shard`")
+        for k, entry in section["shards"].items():
+            missing = FLEET_SHARD_ENTRY_KEYS - set(entry)
+            assert not missing, f"{name} shards[{k}]: {sorted(missing)}"
+            assert math.isfinite(entry["tick_us"]) and entry["tick_us"] > 0
+            assert entry["vet_job"] >= 1.0
+
+
+def test_fleet_shard_total_dispatches_bounded_by_single_plus_k():
+    """The sharding acceptance guard: placement must not shatter shape
+    buckets — across K shards the fleet-total dispatches per tick stay
+    within the single-mux bucket count + K.  Dispatch counts are exact
+    (``VetEngine.dispatches``), so this cannot flake on a loaded machine."""
+    payload = fleet_shard_payload()
+    for name in ("w256", "w1024"):
+        section = payload[name]
+        single = section["single_mux_dispatches_per_tick"]
+        for k, entry in section["shards"].items():
+            assert entry["total_dispatches_per_tick"] <= single + int(k), \
+                f"{name} shards={k}: bucket shattering"
+
+
+def test_fleet_shard_per_shard_load_strictly_falls_at_1024_workers():
+    """The point of sharding: the most estimation work any one shard
+    (process) does per tick — dispatches and rows — strictly decreases
+    from 1 to 4 shards at 1024 workers."""
+    shards = fleet_shard_payload()["w1024"]["shards"]
+    for key in ("per_shard_max_dispatches_per_tick",
+                "per_shard_max_rows_per_tick"):
+        assert shards["1"][key] > shards["2"][key] > shards["4"][key], key
 
 
 def test_vet_engine_streaming_tick_is_incremental():

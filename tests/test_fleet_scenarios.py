@@ -1,0 +1,139 @@
+"""Edge cases for ``repro.fleet.scenarios`` not pinned by the mux suites.
+
+The differential suites replay the scenario bank through muxes and compare
+rows; they never exercise the degenerate fleet states a real deployment
+hits (a churn step that leaves *zero* live workers, arrival chunks smaller
+than any window) and they only pin the simulator's raw draws — not the
+*event scripts* the bank assembles around them.  ``bursty`` consumes an
+extra RNG for its arrival sizes and ``churn`` derives a join/leave schedule,
+neither of which the simulator determinism suite
+(``tests/test_simulator_determinism.py``) covers; their golden hashes here
+pin the full compiled event stream, so an incidental reordering of the
+bank's RNG consumption (or its schedule arithmetic) fails loudly instead of
+silently moving every fleet oracle.
+"""
+
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.engine import VetEngine
+from repro.fleet import (
+    FleetEvent,
+    FleetScenario,
+    ShardedVetMux,
+    StreamSpec,
+    VetMux,
+    build,
+    play,
+)
+
+
+def scenario_hash(sc: FleetScenario) -> str:
+    """Content hash of a compiled scenario: specs + every event's chunks
+    (bytes), joins and leaves, in script order."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(sc.name.encode())
+    for s in sc.specs:
+        h.update(f"{s.stream_id}|{s.window}|{s.stride}|{s.capacity}"
+                 f"|{s.priority}|{s.tenant}".encode())
+    for e in sc.events:
+        for sid in sorted(e.chunks):
+            h.update(sid.encode())
+            h.update(np.ascontiguousarray(e.chunks[sid]).tobytes())
+        h.update(("J" + ",".join(s.stream_id for s in e.joins)).encode())
+        h.update(("L" + ",".join(e.leaves)).encode())
+    return h.hexdigest()
+
+
+class TestScenarioDeterminism:
+    @pytest.mark.parametrize("name", ("bursty", "churn"))
+    def test_same_seed_is_bitwise_stable(self, name):
+        a, b = build(name, seed=0), build(name, seed=0)
+        assert scenario_hash(a) == scenario_hash(b)
+        assert a.specs == b.specs
+
+    def test_golden_hash_pins_bursty_event_stream(self):
+        """bursty's arrival sizes come from an RNG the simulator suite does
+        not see; this pins the exact compiled script.  If it moves, every
+        bursty-driven oracle moved — bump deliberately, never incidentally."""
+        assert scenario_hash(build("bursty", seed=0)) == \
+            "a27058c4c660e3b50585743eec2adbc1"
+
+    def test_golden_hash_pins_churn_event_stream(self):
+        """churn's join/leave schedule is derived arithmetic on top of the
+        simulator draws; pinned for the same reason as bursty."""
+        assert scenario_hash(build("churn", seed=0)) == \
+            "8a6d5670dc24a4b014d9695a995bff85"
+
+    def test_different_seeds_differ(self):
+        assert scenario_hash(build("bursty", seed=0)) != \
+            scenario_hash(build("bursty", seed=1))
+
+
+class TestDegenerateFleetStates:
+    def test_zero_worker_churn_step(self):
+        """A churn script that deregisters *every* stream mid-run: the empty
+        ticks stay well-defined (no rows, no dispatches) and later joins
+        repopulate the fleet deterministically."""
+        w = StreamSpec("w0", window=8, stride=4, capacity=64)
+        j = StreamSpec("j0", window=8, stride=4, capacity=64)
+        times = np.linspace(1e-3, 2e-3, 16)
+        sc = FleetScenario("empty_step", (w,), (
+            FleetEvent(chunks={"w0": times}),
+            FleetEvent(chunks={}, leaves=("w0",)),  # fleet drops to zero
+            FleetEvent(chunks={}),                  # zero-worker tick
+            FleetEvent(chunks={"j0": times * 2}, joins=(j,)),
+        ))
+        for mux in (VetMux(VetEngine("numpy", buckets=64)),
+                    ShardedVetMux(2, backend="numpy")):
+            ticks = play(sc, mux)
+            assert ticks[1].rows > 0 or ticks[0].rows > 0
+            empty = ticks[2]
+            assert empty.rows == 0 and empty.dispatches == 0
+            assert empty.results == {} and not empty.deferred
+            assert len(mux) == 1  # only the joiner remains
+            assert ticks[3].results["j0"].workers == 3
+
+    def test_vet_job_raises_on_a_windowless_fleet(self):
+        mux = ShardedVetMux(2, backend="numpy")
+        mux.register("a", window=8, stride=4)
+        tick = mux.tick()  # nothing fed at all
+        with pytest.raises(ValueError, match="complete window"):
+            tick.vet_job
+
+    def test_single_record_bursts_below_the_smallest_window(self):
+        """Chunks of one record — far below any window — must accumulate
+        without dispatching until the window'th record, then vet exactly
+        once, identical to one big append."""
+        window = 8
+        spec = StreamSpec("w0", window=window, stride=window, capacity=64)
+        times = np.linspace(1e-3, 2e-3, window)
+        sc = FleetScenario("trickle", (spec,), tuple(
+            FleetEvent(chunks={"w0": times[k:k + 1]}) for k in range(window)))
+        eng = VetEngine("numpy", buckets=64)
+        ticks = play(sc, VetMux(eng))
+        assert all(t.rows == 0 and t.dispatches == 0
+                   for t in ticks[:window - 1])
+        assert all(t.results["w0"] is None for t in ticks[:window - 1])
+        assert ticks[-1].rows == 1 and ticks[-1].dispatches == 1
+        ref = VetEngine("numpy", buckets=64).vet_sliding(
+            times, window=window, stride=window)
+        np.testing.assert_array_equal(ticks[-1].results["w0"].vet, ref.vet)
+
+    def test_bursty_quiet_ticks_cost_nothing(self):
+        """The bank's bursty scenario has genuinely empty per-worker ticks;
+        a tick where nobody moved must issue zero dispatches."""
+        sc = build("bursty", n_workers=4, n_ticks=8, seed=3)
+        eng = VetEngine("numpy", buckets=64)
+        mux = VetMux(eng)
+        for spec in sc.specs:
+            spec.register(mux)
+        for event in sc.events:
+            before = eng.dispatches
+            for sid, chunk in event.chunks.items():
+                mux.feed(sid, chunk)
+            tick = mux.tick()
+            if tick.rows == 0:
+                assert eng.dispatches == before

@@ -1,0 +1,403 @@
+"""Differential + placement + budget suite for ``repro.fleet.shard``.
+
+The tentpole contract: a ``ShardedVetMux`` partitions the fleet across K
+shard muxes (one ``VetEngine`` each — separate model processes) and every
+stream's rows stay *equal to the single-mux oracle over the same feeds* —
+bitwise on the numpy backend, 1e-5 on jax/pallas (their standing
+differential contracts) — while the merged job-level ``vet_job`` matches the
+single mux to 1e-9.  Every scenario in the bank is driven through a sharded
+mux and a single-mux oracle in lockstep on all three backends.
+
+Also locked here: deterministic placement (same registration/churn history
+=> same assignment, for both policies), length-affine bin-packing (shape
+buckets never shatter: fleet-total dispatches stay within single-mux + K),
+job-budget water-filling across shards with flush convergence, per-shard
+engine isolation, and the job-reduction merge algebra.
+"""
+
+import numpy as np
+import pytest
+
+from repro.engine import VetEngine, VetStream
+from repro.fleet import (
+    SCENARIOS,
+    JobVet,
+    ShardedVetMux,
+    VetMux,
+    build,
+    job_reduce,
+    merge_job,
+    play,
+    split_budget,
+)
+
+# Per-backend scenario sizes: numpy sweeps a bit wider, the jitted backends
+# keep compiles small (pallas runs in interpret mode on CPU containers).
+SIZES = {
+    "numpy": dict(n_workers=6, n_ticks=5, seed=11),
+    "jax": dict(n_workers=5, n_ticks=4, seed=7),
+    "pallas": dict(n_workers=4, n_ticks=3, seed=3),
+}
+
+
+def overrides(name, backend):
+    ov = dict(SIZES[backend])
+    if backend == "pallas":  # small windows: interpret-mode kernel cost
+        if name == "mixed_windows":
+            ov["windows"] = (8, 12, 16)
+        else:
+            ov["window"] = 16
+    return ov
+
+
+def assert_rows_match(got, ref, *, bitwise, context=""):
+    assert (got is None) == (ref is None), context
+    if ref is None:
+        return
+    assert got.workers == ref.workers, context
+    for name in ("vet", "ei", "oc", "pr"):
+        a, b = getattr(got, name), getattr(ref, name)
+        if bitwise:
+            np.testing.assert_array_equal(a, b, err_msg=context)
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-9,
+                                       err_msg=context)
+    np.testing.assert_array_equal(got.t, ref.t, err_msg=context)
+    np.testing.assert_array_equal(got.n, ref.n, err_msg=context)
+
+
+def drive_and_compare(name, backend, *, shards, bitwise, **ov):
+    """Lockstep a scenario through a ShardedVetMux and a single-mux oracle,
+    comparing every tick's per-stream rows and the merged job reduction."""
+    scenario = build(name, **ov)
+    smux = ShardedVetMux(shards, backend=backend)
+    oracle = VetMux(VetEngine(backend, buckets=64))
+    for spec in scenario.specs:
+        spec.register(smux)
+        spec.register(oracle)
+    for k, event in enumerate(scenario.events):
+        for spec in event.joins:
+            spec.register(smux)
+            spec.register(oracle)
+        for sid, chunk in event.chunks.items():
+            smux.feed(sid, chunk)
+            oracle.feed(sid, chunk)
+        tick = smux.tick()
+        ref = oracle.tick()
+        assert not tick.deferred  # no budget => full service every tick
+        assert set(tick.results) == set(ref.results)
+        for sid in ref.results:
+            assert_rows_match(tick.results[sid], ref.results[sid],
+                              bitwise=bitwise,
+                              context=f"{name} tick {k} stream {sid}")
+        if any(r is not None for r in ref.results.values()):
+            # The job-level merge across shards equals the single-mux mean.
+            assert abs(tick.vet_job - ref.vet_job) <= 1e-9, f"{name} tick {k}"
+        for sid in event.leaves:
+            smux.deregister(sid)
+            oracle.deregister(sid)
+    return smux
+
+
+# ---------------------------------------------------------- differential
+class TestShardedDifferential:
+    @pytest.mark.parametrize("name", sorted(SCENARIOS))
+    def test_numpy_every_tick_bitwise_equals_single_mux(self, name):
+        """Every scenario, every tick, every stream: bitwise vs one mux."""
+        smux = drive_and_compare(name, "numpy", shards=3, bitwise=True,
+                                 **overrides(name, "numpy"))
+        assert smux.stats.rows > 0
+        # more than one shard actually carried streams
+        assert sum(1 for s in smux.shard_stats if s.rows > 0) > 1
+
+    @pytest.mark.parametrize("name", sorted(SCENARIOS))
+    def test_jax_every_tick_matches_single_mux_1e5(self, name):
+        drive_and_compare(name, "jax", shards=2, bitwise=False,
+                          **overrides(name, "jax"))
+
+    @pytest.mark.parametrize("name", sorted(SCENARIOS))
+    def test_pallas_every_tick_matches_single_mux_1e5(self, name):
+        drive_and_compare(name, "pallas", shards=2, bitwise=False,
+                          **overrides(name, "pallas"))
+
+    def test_merged_job_reduction_matches_direct_fleet_means(self):
+        """JobVet ei/oc are the stream-count-weighted means of every
+        stream's newest-window EI/OC, exactly as one process would compute
+        over the whole fleet."""
+        scenario = build("skewed_stragglers", n_workers=6, n_ticks=4, seed=2)
+        smux = ShardedVetMux(3, backend="numpy")
+        last = play(scenario, smux)[-1]
+        job = last.job
+        newest = [(float(r.vet[-1]), float(r.ei[-1]), float(r.oc[-1]))
+                  for r in last.results.values() if r is not None]
+        assert job.streams == len(newest)
+        assert job.vet_job == pytest.approx(np.mean([v for v, _, _ in newest]),
+                                            abs=1e-12)
+        assert job.ei == pytest.approx(np.mean([e for _, e, _ in newest]),
+                                       abs=1e-12)
+        assert job.oc == pytest.approx(np.mean([o for _, _, o in newest]),
+                                       abs=1e-12)
+
+    def test_merge_job_algebra(self):
+        a = JobVet(vet_job=2.0, ei=1.0, oc=1.0, streams=2)
+        b = JobVet(vet_job=5.0, ei=1.0, oc=4.0, streams=1)
+        m = merge_job([a, None, b])
+        assert m == JobVet(vet_job=3.0, ei=1.0, oc=2.0, streams=3)
+        with pytest.raises(ValueError, match="complete window"):
+            merge_job([None, None])
+
+    def test_job_reduce_is_none_before_any_window(self):
+        mux = VetMux(VetEngine("numpy", buckets=64))
+        mux.register("a", window=8, stride=4)
+        mux.feed("a", np.linspace(1e-3, 2e-3, 4))  # below one window
+        assert job_reduce(mux.tick()) is None
+
+
+# -------------------------------------------------------------- placement
+class TestPlacement:
+    def assignments(self, placement, scenario_name="churn", shards=3,
+                    **ov):
+        smux = ShardedVetMux(shards, backend="numpy", placement=placement)
+        play(build(scenario_name, **ov), smux)
+        return smux.assignment
+
+    @pytest.mark.parametrize("placement", ("pack", "round_robin"))
+    def test_same_churn_history_same_assignment(self, placement):
+        """Same seed (scenario) => same placement, register/deregister churn
+        included — the determinism the differential suites stand on."""
+        ov = dict(n_workers=8, n_ticks=8, seed=0)
+        a = self.assignments(placement, **ov)
+        b = self.assignments(placement, **ov)
+        assert a == b
+
+    def test_round_robin_cycles_registration_order(self):
+        smux = ShardedVetMux(3, backend="numpy", placement="round_robin")
+        for i in range(6):
+            smux.register(i, window=8, stride=4)
+        assert [smux.shard_of(i) for i in range(6)] == [0, 1, 2, 0, 1, 2]
+
+    def test_pack_balances_a_homogeneous_fleet(self):
+        smux = ShardedVetMux(4, backend="numpy")
+        for i in range(8):
+            smux.register(i, window=8, stride=4)
+        per_shard = [0] * 4
+        for i in range(8):
+            per_shard[smux.shard_of(i)] += 1
+        assert per_shard == [2, 2, 2, 2]
+
+    def test_pack_co_locates_window_lengths(self):
+        """3 lengths on 3 shards: each shard hosts exactly one distinct
+        length, so a shard tick is one dispatch (no bucket shattering)."""
+        sc = build("mixed_windows", n_workers=9, n_ticks=2, seed=1)
+        smux = ShardedVetMux(3, backend="numpy")
+        for spec in sc.specs:
+            spec.register(smux)
+        lengths_per_shard = [set() for _ in range(3)]
+        for spec in sc.specs:
+            lengths_per_shard[smux.shard_of(spec.stream_id)].add(spec.window)
+        assert all(len(ls) == 1 for ls in lengths_per_shard)
+        assert set().union(*lengths_per_shard) == {16, 32, 64}
+
+    def test_deregister_rebalances_deterministically(self):
+        smux = ShardedVetMux(2, backend="numpy")
+        for sid in "abcd":
+            smux.register(sid, window=8, stride=4)
+        before = dict(smux.assignment)
+        victim = "a"
+        smux.deregister(victim)
+        # the vacated shard is now lightest *and* still hosts the length:
+        # the next same-geometry register lands there
+        smux.register("e", window=8, stride=4)
+        assert smux.shard_of("e") == before[victim]
+
+    def test_attached_stream_pins_its_engine_shard(self):
+        smux = ShardedVetMux(2, backend="numpy")
+        own = VetStream(smux.shard(1).engine, window=8, stride=4)
+        assert smux.register("pinned", stream=own) is own
+        assert smux.shard_of("pinned") == 1
+        alien = VetStream(VetEngine("numpy", buckets=64), window=8)
+        with pytest.raises(ValueError, match="shard engines"):
+            smux.register("alien", stream=alien)
+
+
+# ------------------------------------------------------ dispatch bounds
+class TestDispatchBounds:
+    def test_uniform_total_dispatches_le_single_plus_shards(self):
+        """K shards cost at most K extra dispatches per tick over one mux
+        (one bucket split across at most K shards)."""
+        k = 4
+        sc = build("uniform", n_workers=16, n_ticks=4, window=16, seed=0)
+        single = VetMux(VetEngine("numpy", buckets=64))
+        smux = ShardedVetMux(k, backend="numpy")
+        ref = play(sc, single)
+        got = play(build("uniform", n_workers=16, n_ticks=4, window=16,
+                         seed=0), smux)
+        for t_ref, t_got in zip(ref, got):
+            assert t_got.dispatches <= t_ref.dispatches + k
+
+    def test_mixed_windows_shard_ticks_stay_one_dispatch_per_length(self):
+        sc = build("mixed_windows", n_workers=9, n_ticks=4, seed=1)
+        n_lengths = len({s.window for s in sc.specs})
+        smux = ShardedVetMux(3, backend="numpy")
+        ticks = play(sc, smux)
+        assert max(t.dispatches for t in ticks) <= n_lengths + 3
+        # with co-located lengths the total never exceeds the single-mux
+        # bucket count at all
+        assert max(t.dispatches for t in ticks) == n_lengths
+
+    def test_shard_engines_are_isolated(self):
+        """Each shard's dispatches land on its own engine only (the
+        separate-process model), and the merged stats are their sum."""
+        smux = ShardedVetMux(2, backend="numpy")
+        play(build("uniform", n_workers=4, n_ticks=3, window=16, seed=4),
+             smux)
+        engines = smux.engines
+        assert len({id(e) for e in engines}) == 2
+        assert all(e.dispatches > 0 for e in engines)
+        assert sum(e.dispatches for e in engines) == smux.stats.dispatches
+        per_shard = smux.shard_stats
+        assert [s.dispatches for s in per_shard] == \
+            [e.dispatches for e in engines]
+
+
+# ---------------------------------------------------------------- budget
+class TestShardBudget:
+    def test_budget_bites_and_flush_converges_to_oracle(self):
+        """The job budget defers rows across shards but never drops or
+        reorders them: after flush the fleet equals the batch oracle."""
+        sc = build("uniform", n_workers=6, n_ticks=4, window=16, seed=5)
+        smux = ShardedVetMux(2, backend="numpy", budget=4)
+        play(sc, smux)
+        assert smux.stats.deferred > 0  # the budget actually bit
+        last = smux.flush()
+        oracle = VetEngine("numpy", buckets=64)
+        for spec in sc.specs:
+            fed = np.concatenate([e.chunks[spec.stream_id]
+                                  for e in sc.events
+                                  if spec.stream_id in e.chunks])
+            ref = oracle.vet_sliding(fed, window=spec.window,
+                                     stride=spec.stride)
+            assert_rows_match(last.results[spec.stream_id], ref,
+                              bitwise=True, context=spec.stream_id)
+
+    def test_tick_water_fills_the_budget_across_shards(self):
+        smux = ShardedVetMux(2, backend="numpy", budget=4)
+        for i in range(4):
+            smux.register(i, window=8, stride=4, capacity=256)
+        for i in range(4):
+            smux.feed(i, np.linspace(1e-3, 2e-3, 40))  # 9 windows each
+        tick = smux.tick()
+        assert tick.budgets == (2, 2)  # equal demand => even split
+        assert tick.rows == 4  # job budget respected fleet-wide
+        assert sum(tick.deferred.values()) > 0
+
+    def test_budget_validation(self):
+        with pytest.raises(ValueError, match="budget"):
+            ShardedVetMux(2, backend="numpy", budget=0)
+
+    # ----- split_budget unit behavior (the shard-level water-filling)
+    def test_split_budget_respects_demand(self):
+        assert split_budget(100, [3, 0, 1]) == [3, 0, 1]
+
+    def test_split_budget_even_and_remainder(self):
+        assert split_budget(8, [10, 10]) == [4, 4]
+        assert split_budget(5, [10, 10]) == [3, 2]  # remainder round-robin
+
+    def test_split_budget_unused_share_flows(self):
+        assert split_budget(8, [2, 10]) == [2, 6]
+
+    def test_split_budget_weights_bias(self):
+        assert split_budget(9, [12, 12], weights=[2.0, 1.0]) == [6, 3]
+
+    def test_split_budget_zero_and_negative_budget(self):
+        assert split_budget(0, [5, 5]) == [0, 0]
+        assert split_budget(-3, [5, 5]) == [0, 0]
+
+    def test_split_budget_validation(self):
+        with pytest.raises(ValueError, match="weight"):
+            split_budget(4, [1, 1], weights=[1.0, 0.0])
+        with pytest.raises(ValueError, match="length"):
+            split_budget(4, [1, 1], weights=[1.0])
+
+    def test_urgent_streams_still_served_past_the_job_budget(self):
+        """Ring-overrun urgency is a per-shard correctness rail: a stream at
+        the edge of its ring is drained in full regardless of the slice."""
+        smux = ShardedVetMux(2, backend="numpy", budget=1)
+        smux.register("tight", window=8, stride=4, capacity=16)
+        smux.register("other", window=8, stride=4, capacity=256)
+        rng = np.random.default_rng(1)
+        tight_times = rng.uniform(1e-3, 2e-3, 160)
+        smux.feed("other", rng.uniform(1e-3, 2e-3, 64))
+        smux.feed("tight", tight_times)  # 10x the ring: pressure ticks
+        last = smux.flush()
+        ref = VetEngine("numpy", buckets=64).vet_sliding(
+            tight_times, window=8, stride=4)
+        assert_rows_match(last.results["tight"], ref, bitwise=True)
+
+
+# -------------------------------------------------------------- lifecycle
+class TestShardedLifecycle:
+    def test_constructor_validation(self):
+        with pytest.raises(ValueError, match="shards must be >= 1"):
+            ShardedVetMux(0, backend="numpy")
+        with pytest.raises(ValueError, match="placement"):
+            ShardedVetMux(2, backend="numpy", placement="random")
+        with pytest.raises(ValueError, match="not both"):
+            ShardedVetMux(engines=[VetEngine("numpy")],
+                          engine=VetEngine("numpy"))
+        with pytest.raises(ValueError, match="at least one"):
+            ShardedVetMux(engines=[])
+        with pytest.raises(ValueError, match="engines given"):
+            ShardedVetMux(3, engines=[VetEngine("numpy")])
+
+    def test_engine_template_replicates_config(self):
+        template = VetEngine("numpy", omega=4, buckets=32, cut_space="raw",
+                             cache_size=7)
+        smux = ShardedVetMux(3, engine=template)
+        assert smux.engines[0] is template
+        for e in smux.engines[1:]:
+            assert e is not template
+            assert (e.backend, e.omega, e.buckets, e.cut_space) == \
+                ("numpy", 4, 32, "raw")
+            assert e._cache_size == 7
+
+    def test_register_duplicate_rejected_across_shards(self):
+        smux = ShardedVetMux(2, backend="numpy")
+        smux.register("a", window=8)
+        with pytest.raises(ValueError, match="already registered"):
+            smux.register("a", window=8)
+
+    def test_register_needs_window_or_stream(self):
+        with pytest.raises(ValueError, match="window"):
+            ShardedVetMux(2, backend="numpy").register("a")
+
+    def test_feed_requires_registration(self):
+        with pytest.raises(KeyError, match="not registered"):
+            ShardedVetMux(2, backend="numpy").feed("ghost", [1.0, 2.0])
+
+    def test_ids_iterate_in_registration_order_across_shards(self):
+        smux = ShardedVetMux(3, backend="numpy")
+        order = ["z", "a", "m", "b"]
+        for sid in order:
+            smux.register(sid, window=8, stride=4)
+        assert list(smux.ids()) == order
+        assert len(smux) == 4 and "m" in smux
+
+    def test_deregistered_stream_survives_standalone(self):
+        smux = ShardedVetMux(2, backend="numpy")
+        smux.register("a", window=8, stride=4)
+        smux.feed("a", np.linspace(1e-3, 2e-3, 16))
+        t = smux.tick()
+        stream = smux.deregister("a")
+        assert "a" not in smux and len(smux) == 0
+        stream.append(np.linspace(2e-3, 3e-3, 8))
+        res = stream.tick()
+        assert res.workers > t.results["a"].workers
+
+    def test_tick_results_follow_registration_order(self):
+        smux = ShardedVetMux(2, backend="numpy")
+        for sid in ("x", "y", "z"):
+            smux.register(sid, window=8, stride=4)
+            smux.feed(sid, np.linspace(1e-3, 2e-3, 8))
+        tick = smux.tick()
+        assert list(tick.results) == ["x", "y", "z"]

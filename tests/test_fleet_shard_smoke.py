@@ -1,0 +1,91 @@
+"""Fast tier-1 smoke for the sharded fleet path: <= 64 workers, 2 shards,
+numpy backend only.
+
+The full suite (``tests/test_fleet_shard.py``) sweeps every scenario and
+backend; this file keeps tier-1 cheap while proving the load-bearing
+properties end to end at a realistic width: single-mux oracle equality,
+job-level merge equality, dispatch distribution across shards, a working
+benchmark harness, and the quickstart's sharded stanza (the docs-gate
+snippet) actually running.
+"""
+
+import importlib.util
+import os
+
+import numpy as np
+
+import benchmarks.fleet_shard as shard_bench
+from repro.engine import VetEngine
+from repro.fleet import ShardedVetMux, VetMux, build, play
+
+
+def test_64_worker_2shard_fleet_matches_batch_oracle_bitwise():
+    """64 streams over 2 shards: final rows == the vet_sliding oracle."""
+    scenario = build("uniform", n_workers=64, n_ticks=3, window=16, seed=21)
+    last = play(scenario, ShardedVetMux(2, backend="numpy"))[-1]
+    oracle = VetEngine("numpy", buckets=64)
+    for spec in scenario.specs:
+        fed = np.concatenate([e.chunks[spec.stream_id]
+                              for e in scenario.events])
+        ref = oracle.vet_sliding(fed, window=spec.window, stride=spec.stride)
+        got = last.results[spec.stream_id]
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_64_worker_2shard_merged_vet_job_matches_single_mux():
+    sc_args = dict(n_workers=64, n_ticks=3, window=16, seed=22)
+    sharded = play(build("uniform", **sc_args),
+                   ShardedVetMux(2, backend="numpy"))[-1]
+    single = play(build("uniform", **sc_args),
+                  VetMux(VetEngine("numpy", buckets=64)))[-1]
+    assert abs(sharded.vet_job - single.vet_job) <= 1e-9
+    assert sharded.job.streams == 64
+
+
+def test_64_worker_2shard_dispatch_distribution():
+    """A homogeneous fleet splits its one bucket across exactly the two
+    shards: 2 dispatches per moving tick (single mux + K bound), half the
+    rows on each shard."""
+    smux = ShardedVetMux(2, backend="numpy")
+    ticks = play(build("uniform", n_workers=64, n_ticks=3, window=16,
+                       seed=23), smux)
+    moving = [t for t in ticks if t.rows]
+    assert moving and all(t.dispatches == 2 for t in moving)
+    for t in moving:
+        shard_rows = [s.rows for s in t.shards]
+        assert sum(shard_rows) == t.rows
+        assert max(shard_rows) == t.rows // 2  # balanced split
+    assert sum(e.dispatches for e in smux.engines) == smux.stats.dispatches
+
+
+def test_benchmark_harness_smoke_tiny():
+    """The shard-scaling benchmark loop at toy size (8 workers, numpy):
+    payload complete, total-dispatch bound holds, per-shard max falls."""
+    out = shard_bench.bench_shard_scaling(
+        8, shards_list=(1, 2), n_lengths=2, n_ticks=2, backend="numpy",
+        seed=5)
+    single = out["single_mux_dispatches_per_tick"]
+    assert single == 2  # one bucket per window length
+    for k, entry in out["shards"].items():
+        assert entry["total_dispatches_per_tick"] <= single + int(k)
+        assert np.isfinite(entry["tick_us"]) and entry["vet_job"] >= 1.0
+    assert (out["shards"]["2"]["per_shard_max_dispatches_per_tick"]
+            < out["shards"]["1"]["per_shard_max_dispatches_per_tick"])
+    assert (out["shards"]["2"]["per_shard_max_rows_per_tick"]
+            < out["shards"]["1"]["per_shard_max_rows_per_tick"])
+
+
+def test_quickstart_stanza6_runs_end_to_end():
+    """The docs-gate snippet: quickstart's sharded-fleet stanza runs and
+    reports a merged job-level vet over every stream."""
+    path = os.path.join(os.path.dirname(__file__), os.pardir, "examples",
+                        "quickstart.py")
+    spec = importlib.util.spec_from_file_location("quickstart_module", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    out = mod.stanza6(n_workers=9, shards=2, n_ticks=3, backend="numpy",
+                      verbose=False)
+    assert out["vet_job"] >= 1.0
+    assert sum(out["balance"]) == 9 and out["streams"] == 9
+    assert len(out["dispatches_per_shard"]) == 2
