@@ -136,6 +136,54 @@ def bench_mixed_windows(workers: int = 255, *, n_ticks: int = 4,
     return out
 
 
+def bench_mixed_fused(workers: int = 256, *, n_ticks: int = 4, seed: int = 1,
+                      strides_per_tick: int = 1) -> dict:
+    """mixed_windows on pallas: the fused one-launch tick vs the bucketed
+    gather path (``fused=False``), same scenario, same rows.
+
+    Two numbers matter: dispatches/tick (window-length count on the bucketed
+    path, 1 fused) and peak per-tick staged bytes (the bucketed path
+    materializes O(windows x length) gather matrices; the fused launch
+    stages the O(ring) arena + per-row metadata).
+    """
+    sc = build("mixed_windows", n_workers=workers, n_ticks=n_ticks, seed=seed,
+               strides_per_tick=strides_per_tick)
+    n_lengths = len({s.window for s in sc.specs})
+    out = {"workers": workers, "window_lengths": n_lengths,
+           "n_ticks": n_ticks, "strides_per_tick": strides_per_tick}
+    for label, fused in (("fused", True), ("bucketed", False)):
+        eng = VetEngine("pallas", buckets=64, cache_size=0, fused=fused)
+        mux = VetMux(eng)
+        for spec in sc.specs:
+            spec.register(mux)
+        ticks, peak_bytes, wall = [], 0, 0.0
+        for event in sc.events:
+            for sid, chunk in event.chunks.items():
+                mux.feed(sid, chunk)
+            b0 = eng.dispatch_bytes
+            t0 = time.perf_counter()
+            ticks.append(mux.tick())
+            wall += time.perf_counter() - t0
+            peak_bytes = max(peak_bytes, eng.dispatch_bytes - b0)
+        out[label] = {
+            "max_dispatches_per_tick": max(t.dispatches for t in ticks
+                                           if t.rows),
+            "peak_tick_bytes": peak_bytes,
+            "rows": mux.stats.rows,
+            "wall_s": wall,
+        }
+    out["dispatch_reduction"] = (out["bucketed"]["max_dispatches_per_tick"]
+                                 / out["fused"]["max_dispatches_per_tick"])
+    out["bytes_ratio"] = (out["bucketed"]["peak_tick_bytes"]
+                          / out["fused"]["peak_tick_bytes"])
+    emit(f"fleet/mixed_fused_{workers}w",
+         out["fused"]["wall_s"] / n_ticks * 1e6,
+         f"dispatches={out['bucketed']['max_dispatches_per_tick']}->"
+         f"{out['fused']['max_dispatches_per_tick']};"
+         f"bytes_ratio={out['bytes_ratio']:.2f}x")
+    return out
+
+
 def run():
     out = {"window": 64, "stride": 32, "chunk": 32, "workers": 256}
     for backend in BACKENDS:

@@ -41,6 +41,12 @@ def run():
     out["vet_engine_streaming"] = bench_streaming(n_records=8192, window=256,
                                                   stride=256, chunk=1024)
 
+    # fused window-vet: dense sliding windows, one launch vs gather batch
+    from .windowvet import bench_sliding
+
+    out["windowvet"] = bench_sliding(n_records=2048, window=64, stride=16,
+                                     iters=3)
+
     # flash attention 512 x 8h x 64d
     ks = jax.random.split(KEY, 3)
     q = jax.random.normal(ks[0], (1, 512, 8, 64), jnp.float32)

@@ -23,6 +23,7 @@ SUITES = [
     ("fig14_correlation", "Paper Fig 14: vet vs task-time correlation"),
     ("roofline", "Framework: roofline table from dry-run"),
     ("kernels_bench", "Framework: Pallas kernel micro-benchmarks"),
+    ("windowvet", "Framework: fused window-vet launch vs bucketed gather"),
     ("vet_engine", "Framework: VetEngine backend comparison (numpy/jax/pallas)"),
     ("fleet", "Framework: VetMux coalesced fleet ticks vs per-stream loop"),
     ("fleet_shard", "Framework: ShardedVetMux shard-scaling vs one mux"),

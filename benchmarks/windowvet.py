@@ -1,0 +1,82 @@
+"""Fused window-vet kernel: one-launch ragged fleets vs bucketed gather.
+
+Three sections, all on the pallas backend (interpret mode on this CPU
+container — the dispatch and byte counts are exact and platform-independent;
+the wall clocks are CPU correctness/latency tracking, not TPU numbers):
+
+- ``w256`` / ``w1024`` — the ``mixed_windows`` fleet scenario (window
+  lengths 16/32/64 cycling across workers) with the fused engine vs the
+  same engine forced onto the bucketed gather path.  Fused ticks issue ONE
+  launch regardless of how many window lengths are live; bucketed ticks
+  issue one per distinct length.  Peak per-tick staged bytes contrast the
+  O(ring) fused arena against the O(windows x length) gather matrices.
+- ``sliding`` — kernel-level micro: ``fused_window_vet`` over a dense
+  sliding window set vs the engine's materialize-and-batch gather path on
+  the same stream, plus the staged-vs-materialized byte ledger.
+
+The committed ``windowvet.json`` is schema-pinned by
+``tests/test_benchmark_results_schema.py``: fused dispatches/tick == 1 and
+fused staged bytes strictly below the bucketed path are acceptance floors,
+not advisory numbers.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.engine import VetEngine
+from repro.kernels.windowvet import fused_window_vet
+from repro.kernels.windowvet.ops import staged_bytes
+
+from .common import emit, save_json, time_fn
+from .fleet import bench_mixed_fused
+
+
+def bench_sliding(n_records: int = 4096, *, window: int = 64,
+                  stride: int = 16, seed: int = 0, iters: int = 3) -> dict:
+    """One stream, every stride-spaced window: fused kernel vs gather path."""
+    from repro.profiling import simulate_records
+
+    times = simulate_records(n_records, seed=seed).times
+    starts = np.arange(0, n_records - window + 1, stride, dtype=np.int64)
+    lengths = np.full(starts.size, window, dtype=np.int64)
+
+    t_fused = time_fn(
+        lambda: fused_window_vet(times, starts, lengths), iters=iters)
+    gather = VetEngine("pallas", buckets=64, cache_size=0, fused=False)
+    t_gather = time_fn(
+        lambda: gather.vet_sliding(times, window=window, stride=stride),
+        iters=iters)
+
+    rows_p = max(8, 1 << (int(starts.size) - 1).bit_length())
+    materialized = rows_p * window * 8  # the gather path's padded f64 matrix
+    staged = staged_bytes(n_records, starts.size, window)
+    out = {
+        "n_records": n_records,
+        "window": window,
+        "stride": stride,
+        "num_windows": int(starts.size),
+        "fused_us": t_fused * 1e6,
+        "gather_us": t_gather * 1e6,
+        "staged_bytes": staged,
+        "materialized_bytes": materialized,
+        "bytes_ratio": materialized / staged,
+    }
+    emit("windowvet/sliding", out["fused_us"],
+         f"gather_us={out['gather_us']:.1f};"
+         f"bytes_ratio={out['bytes_ratio']:.2f}x")
+    return out
+
+
+def run():
+    out = {
+        "sliding": bench_sliding(),
+        "w256": bench_mixed_fused(256, strides_per_tick=2),
+        "w1024": bench_mixed_fused(1024, n_ticks=3, strides_per_tick=2),
+    }
+    emit("windowvet/summary", 0.0,
+         f"w256_dispatches={out['w256']['bucketed']['max_dispatches_per_tick']}"
+         f"->{out['w256']['fused']['max_dispatches_per_tick']};"
+         f"w1024_bytes_ratio={out['w1024']['bytes_ratio']:.2f}x")
+    save_json("windowvet", out)
+    return out

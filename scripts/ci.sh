@@ -94,6 +94,17 @@ python -m pytest -q -x \
   tests/test_benchmarks_smoke.py \
   || windowed_status=$?
 
+# Fused window-vet kernel: the one-launch ragged path against its ladder
+# (gather rung bitwise on the cut, f64 scalar root), including the ring-wrap
+# seam and the one-dispatch fused mux tick.
+echo "[ci] fused window-vet: kernel differential + property suites"
+windowvet_status=0
+python -m pytest -q -x \
+  --junitxml="$REPORTS_DIR/windowvet.xml" \
+  tests/test_windowvet.py \
+  tests/test_windowvet_properties.py \
+  || windowvet_status=$?
+
 # Full run (no -x) so the report covers every module, and the engine smoke
 # below still executes when a test fails; exit status reflects the tests.
 # The streaming/windowed suites already ran above, so they are not run twice.
@@ -111,6 +122,8 @@ python -m pytest -q \
   --ignore=tests/test_vet_windows.py \
   --ignore=tests/test_vet_windows_properties.py \
   --ignore=tests/test_benchmarks_smoke.py \
+  --ignore=tests/test_windowvet.py \
+  --ignore=tests/test_windowvet_properties.py \
   "$@" || status=$?
 
 echo "[ci] smoke: VetEngine backend benchmark (batch + windowed + streaming)"
@@ -132,6 +145,10 @@ fi
 if [ "$windowed_status" -ne 0 ]; then
   echo "[ci] FAIL: windowed vetting suites exited $windowed_status"
   exit "$windowed_status"
+fi
+if [ "$windowvet_status" -ne 0 ]; then
+  echo "[ci] FAIL: fused window-vet suites exited $windowvet_status"
+  exit "$windowvet_status"
 fi
 if [ "$status" -ne 0 ]; then
   echo "[ci] FAIL: pytest exited $status"

@@ -41,6 +41,13 @@ Backends (``VetEngine(backend=...)``):
   curves), its batched trace can flip the cut by one bucket on a small
   fraction of workers — EI/OC stay within ~2% of the oracle, and the
   change-point is identical on well-separated (e.g. noiseless) landscapes.
+  Windowed/stream/mux entry points additionally route through the *fused*
+  block-sparse kernel (``repro.kernels.windowvet``, ``fused=`` to
+  override): one launch vets an entire ragged window set straight out of
+  the shared buffer — one dispatch per tick instead of one per window
+  length, staged memory O(ring) instead of O(windows x length) — while
+  ``vet_batch`` and bucketed rows keep the gather path, which doubles as
+  the fused kernel's differential oracle.
 
 Ragged inputs (workers with different record counts) go through
 ``vet_many``, which groups equal-length profiles and runs one batched call
@@ -86,7 +93,8 @@ from .engine import (
     VetEngine,
     default_engine,
 )
-from .stream import StreamDelta, StreamStats, VetStream
+from .stream import RingDelta, StreamDelta, StreamStats, VetStream
 
-__all__ = ["BACKENDS", "BatchVetResult", "CacheInfo", "StreamDelta",
-           "StreamStats", "VetEngine", "VetStream", "default_engine"]
+__all__ = ["BACKENDS", "BatchVetResult", "CacheInfo", "RingDelta",
+           "StreamDelta", "StreamStats", "VetEngine", "VetStream",
+           "default_engine"]

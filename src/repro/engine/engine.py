@@ -39,6 +39,8 @@ import numpy as np
 
 from ..core.vet import VetResult, vet_pipeline, vet_task
 from ..kernels.changepoint.ops import auto_block, changepoint_pallas
+from ..kernels.runtime import resolve_interpret
+from ..kernels.windowvet.ops import fused_window_vet, staged_bytes
 
 __all__ = [
     "BACKENDS",
@@ -98,7 +100,17 @@ class VetEngine:
     (curve bucketing; auto-disabled when a profile has < 4*buckets records)
     and ``cut_space`` ("log" framework default / "raw" paper-literal).
     ``backend`` picks the execution path, see ``repro.engine`` docstring;
-    ``interpret`` keeps the Pallas kernel in interpret mode (CPU containers).
+    ``interpret`` picks the Pallas kernel mode — ``None`` (default) resolves
+    the platform policy (compiled on TPU, interpret elsewhere, overridable
+    via ``REPRO_PALLAS_INTERPRET`` — see ``repro.kernels.runtime``).
+    ``fused`` routes windowed entry points (``vet_sliding``/``vet_windows``
+    and the stream/mux tick paths) through the fused block-sparse Pallas
+    kernel (``repro.kernels.windowvet``): one launch per ragged window set
+    — one dispatch per tick, staged memory O(arena) — instead of one
+    materialized gather dispatch per distinct window length.  ``None``
+    enables it exactly for ``backend="pallas"``; the gather path stays as
+    the differential oracle (and serves bucketed rows, which the fused
+    non-bucketed kernel does not cover).
     ``cache_size`` bounds the memoized result cache (LRU over input
     fingerprints; 0 disables it) so repeated ticks over an unchanged buffer
     return the stored result instead of re-running the compiled batch.
@@ -111,7 +123,8 @@ class VetEngine:
         omega: int = 3,
         buckets: Optional[int] = 1000,
         cut_space: str = "log",
-        interpret: bool = True,
+        interpret: Optional[bool] = None,
+        fused: Optional[bool] = None,
         cache_size: int = 128,
     ):
         if backend not in BACKENDS:
@@ -122,13 +135,21 @@ class VetEngine:
         self.omega = omega
         self.buckets = buckets
         self.cut_space = cut_space
-        self.interpret = interpret
+        self.interpret = resolve_interpret(interpret)
+        self.fused = (backend == "pallas") if fused is None else bool(fused)
         self._batch_fn = None  # compiled lazily on first vet_batch
-        # Backend dispatches ever issued (one per _vet_batch_impl call,
-        # cache hits excluded).  The fleet benchmarks/tests read this to
-        # prove coalescing: a mux tick is one dispatch per shape bucket
-        # where a per-stream loop pays one per stream.
+        # Backend dispatches ever issued (one per _vet_batch_impl /
+        # _vet_arena_impl call, cache hits excluded).  The fleet
+        # benchmarks/tests read this to prove coalescing: a mux tick is one
+        # dispatch per shape bucket (one total on the fused path) where a
+        # per-stream loop pays one per stream.
         self.dispatches = 0
+        # Bytes staged for the backend across those dispatches: the
+        # materialized (windows x length) gather matrices on the batch
+        # path, the O(arena + rows) padded launch inputs on the fused
+        # path.  The windowvet benchmarks read deltas of this to verify
+        # the O(ring) memory claim.
+        self.dispatch_bytes = 0
         # Memoized results: fingerprint(buffer) + params -> BatchVetResult.
         # cache_size=0 disables memoization (e.g. for honest benchmarking).
         self._cache_size = int(cache_size)
@@ -336,6 +357,7 @@ class VetEngine:
 
     def _vet_batch_impl(self, m: np.ndarray) -> BatchVetResult:
         self.dispatches += 1
+        self.dispatch_bytes += m.nbytes
         if self.backend == "numpy":
             return self._numpy_batch(m)
         if self._batch_fn is None:
@@ -350,6 +372,32 @@ class VetEngine:
             t=np.asarray(t, dtype=np.int32),
             n=np.full(w, m.shape[1], dtype=np.int64),
         )
+
+    # ------------------------------------------------------------ fused path
+    def fused_supported(self, max_len: int) -> bool:
+        """Whether the fused block-sparse kernel serves windows up to
+        ``max_len`` on this engine.  Requires the pallas backend with
+        ``fused`` enabled, and every row non-bucketed (``vet_pipeline``
+        switches to the bucketed curve at ``n >= 4 * buckets``, which the
+        fused kernel does not implement — those rows keep the gather
+        path)."""
+        return (self.fused and self.backend == "pallas"
+                and (self.buckets is None or max_len < 4 * self.buckets))
+
+    def _vet_arena_impl(self, arena: np.ndarray, starts: np.ndarray,
+                        lengths: np.ndarray) -> BatchVetResult:
+        """One fused launch over ragged windows of a shared arena.
+
+        The fused twin of ``_vet_batch_impl``: counts one dispatch, stages
+        O(arena + rows) bytes (the kernel slices windows out of the arena
+        in VMEM — no gather matrix is ever materialized)."""
+        self.dispatches += 1
+        self.dispatch_bytes += staged_bytes(arena.size, starts.size,
+                                            int(lengths.max()))
+        vet, ei, oc, pr, t, n = fused_window_vet(
+            arena, starts, lengths, omega=self.omega,
+            cut_space=self.cut_space, interpret=self.interpret)
+        return BatchVetResult(vet=vet, ei=ei, oc=oc, pr=pr, t=t, n=n)
 
     def pad_rows_pow2(self, matrix: np.ndarray):
         """Pad a delta batch to the next power-of-two row count.
@@ -514,6 +562,11 @@ class VetEngine:
 
     def _vet_sliding_impl(self, t, window, stride) -> BatchVetResult:
         starts = np.arange(0, t.size - window + 1, stride)
+        if self.fused_supported(window):
+            # One fused launch over the stream itself: memory O(stream),
+            # not O(windows x window).
+            return self._vet_arena_impl(
+                t, starts, np.full(starts.size, window, dtype=np.int64))
         gather = starts[:, None] + np.arange(window)[None, :]
         return self._vet_batch_impl(t[gather])
 
@@ -581,6 +634,11 @@ class VetEngine:
         return np.asarray(pairs, dtype=np.int64)
 
     def _vet_windows_impl(self, t, bounds) -> BatchVetResult:
+        lengths = bounds[:, 1] - bounds[:, 0]
+        if self.fused_supported(int(lengths.max())):
+            # The ragged set is a single block-sparse launch: no grouping
+            # by length, no per-group gather — one dispatch total.
+            return self._vet_arena_impl(t, bounds[:, 0], lengths)
         # Same group-by-length batching as ragged profiles; the slices are
         # views, so the per-group stack is the materializing gather.
         return self._vet_many_impl([t[lo:hi] for lo, hi in bounds])

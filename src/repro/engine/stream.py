@@ -66,7 +66,7 @@ import numpy as np
 
 from .engine import BatchVetResult, VetEngine, default_engine
 
-__all__ = ["StreamDelta", "StreamStats", "VetStream"]
+__all__ = ["RingDelta", "StreamDelta", "StreamStats", "VetStream"]
 
 _GROW = 64  # initial per-field result capacity (windows); grows as needed
 
@@ -97,6 +97,25 @@ class StreamDelta(NamedTuple):
     start: int  # first window index covered by this delta
     count: int  # number of windows in this delta
     matrix: np.ndarray  # (count, window) float64 gather of the delta windows
+    key: tuple  # content-pure engine-cache key for these rows
+    epoch: int  # stream epoch at drain time (commit rejects a mismatch)
+
+
+class RingDelta(NamedTuple):
+    """The fused-path twin of ``StreamDelta`` (``VetStream.drain_ring``).
+
+    Instead of materializing the (count, window) gather matrix, it hands the
+    engine's fused kernel the contiguous ring span covering the delta plus
+    ring-relative window starts — memory O(span) <= O(ring), never
+    O(windows x window).  ``commit`` accepts either delta type (it only
+    reads the watermark/epoch/count fields).
+    """
+
+    start: int  # first window index covered by this delta
+    count: int  # number of windows in this delta
+    arena: np.ndarray  # (span,) float64 stream-order span covering the delta
+    starts: np.ndarray  # (count,) int64 window starts relative to arena[0]
+    window: int  # records per window
     key: tuple  # content-pure engine-cache key for these rows
     epoch: int  # stream epoch at drain time (commit rejects a mismatch)
 
@@ -402,6 +421,51 @@ class VetStream:
                            matrix=self._gather(starts), key=key,
                            epoch=self._epoch)
 
+    def drain_ring(self, max_windows: Optional[int] = None) \
+            -> Optional[RingDelta]:
+        """``drain`` for the fused engine path: ring-relative bounds, no
+        gather matrix.
+
+        Returns the contiguous stream-order span covering the pending
+        windows plus their span-relative starts (a ``RingDelta``) — memory
+        O(span), where ``drain`` materializes O(windows x window).  Same
+        watermark/overrun semantics as ``drain``; the cache key differs by
+        tag only (the fused kernel's rows are not bitwise the gather
+        batch's, so the two paths must not share cache entries).
+
+        Example::
+
+            >>> eng = VetEngine("numpy", buckets=64)
+            >>> s = VetStream(eng, window=8, stride=4, capacity=32)
+            >>> _ = s.append(np.linspace(1e-3, 2e-3, 16))
+            >>> d = s.drain_ring()
+            >>> (d.start, d.count, d.arena.shape, d.starts.tolist())
+            (0, 3, (16,), [0, 4, 8])
+        """
+        n_new = self.pending_windows
+        if n_new <= 0:
+            return None
+        if max_windows is not None:
+            n_new = min(n_new, int(max_windows))
+            if n_new <= 0:
+                return None
+        base = self._vetted * self.stride
+        if base < self._total - self.capacity:
+            raise ValueError(
+                f"stream overran the ring buffer: window "
+                f"{self._vetted} starts at record {base} but only "
+                f"records [{self._total - self.capacity}, {self._total}) "
+                f"are resident; tick() more often or raise capacity "
+                f"({self.capacity})")
+        end = (self._vetted + n_new - 1) * self.stride + self.window
+        arena = self._ring[np.arange(base, end) % self.capacity]
+        starts = np.arange(n_new, dtype=np.int64) * self.stride
+        key = ("fusedring", self.window, self.stride, self._vetted,
+               self._vetted + n_new, self._epoch, self._fp.hexdigest())
+        return RingDelta(start=self._vetted, count=n_new, arena=arena,
+                         starts=starts, window=self.window, key=key,
+                         epoch=self._epoch)
+
     def commit(self, delta: StreamDelta, rows: BatchVetResult) -> None:
         """Splice externally computed ``rows`` for ``delta`` into the stream.
 
@@ -507,16 +571,26 @@ class VetStream:
         self._ticks += 1
         if self.complete_windows == 0:
             return None
-        delta = self.drain()
+        fused = self.engine.fused_supported(self.window)
+        delta = self.drain_ring() if fused else self.drain()
         if delta is None:
             if self._last is not None:
                 self._reused_rows += self.complete_windows
                 return self._last
             return self.collect()
         n_new = delta.count
-        matrix, _ = self.engine.pad_rows_pow2(delta.matrix)
-        rows = self.engine._memo(
-            delta.key, lambda: self.engine._vet_batch_impl(matrix))
+        if fused:
+            # Fused path: hand the engine ring-relative bounds — one
+            # launch, staged memory O(span); row padding happens inside
+            # the kernel wrapper.
+            lengths = np.full(n_new, self.window, dtype=np.int64)
+            rows = self.engine._memo(
+                delta.key, lambda: self.engine._vet_arena_impl(
+                    delta.arena, delta.starts, lengths))
+        else:
+            matrix, _ = self.engine.pad_rows_pow2(delta.matrix)
+            rows = self.engine._memo(
+                delta.key, lambda: self.engine._vet_batch_impl(matrix))
         if rows.workers > n_new:
             rows = BatchVetResult(*(a[:n_new] for a in rows))
         self.commit(delta, rows)

@@ -41,7 +41,7 @@ from typing import Dict, Hashable, Iterator, List, NamedTuple, Optional, Tuple
 import numpy as np
 
 from ..engine import BatchVetResult, VetEngine, VetStream, default_engine
-from ..engine.stream import StreamDelta
+from ..engine.stream import RingDelta, StreamDelta
 from .schedule import StreamRequest, TickPlan, plan_tick
 
 __all__ = ["MuxStats", "MuxTick", "VetMux"]
@@ -295,18 +295,55 @@ class VetMux:
                          tenant_weights=self.tenant_weights,
                          urgent_headroom=self.urgent_headroom)
 
+        dispatches = rows = padded = 0
+        serviced: Dict[Hashable, int] = {}
+
+        # Fused path: when the engine's block-sparse kernel covers every
+        # window length planned for service, the whole ragged tick is ONE
+        # launch — the per-length shape buckets below collapse into a
+        # single concatenated arena with a row -> (stream, window) map.
+        fused = bool(plan.serve) and self.engine.fused_supported(
+            max(self._members[sid].stream.window for sid in plan.serve))
+        if fused:
+            ring: List[Tuple[Hashable, RingDelta]] = []
+            for sid, take in plan.serve.items():
+                delta = self._members[sid].stream.drain_ring(max_windows=take)
+                if delta is not None:
+                    ring.append((sid, delta))
+            if ring:
+                offsets = np.cumsum(
+                    [0] + [d.arena.size for _, d in ring[:-1]])
+                arena = np.concatenate([d.arena for _, d in ring])
+                starts = np.concatenate(
+                    [d.starts + off for (_, d), off in zip(ring, offsets)])
+                lengths = np.concatenate(
+                    [np.full(d.count, d.window, dtype=np.int64)
+                     for _, d in ring])
+                key = ("muxfused", tuple(d.key for _, d in ring))
+                res = self.engine._memo(
+                    key, lambda: self.engine._vet_arena_impl(arena, starts,
+                                                             lengths))
+                dispatches += 1
+                off = 0
+                for sid, delta in ring:
+                    seg = BatchVetResult(
+                        *(a[off:off + delta.count] for a in res))
+                    self._members[sid].stream.commit(delta, seg)
+                    serviced[sid] = delta.count
+                    off += delta.count
+                    rows += delta.count
+
         # Drain in plan order, bucket by window length (the matrix column
         # count) — heterogeneous fleets dispatch once per distinct length.
         buckets: "OrderedDict[int, List[Tuple[Hashable, StreamDelta]]]" = \
             OrderedDict()
-        for sid, take in plan.serve.items():
-            delta = self._members[sid].stream.drain(max_windows=take)
-            if delta is not None:
-                buckets.setdefault(delta.matrix.shape[1], []).append(
-                    (sid, delta))
+        if not fused:
+            for sid, take in plan.serve.items():
+                delta = self._members[sid].stream.drain(max_windows=take)
+                if delta is not None:
+                    buckets.setdefault(delta.matrix.shape[1], []).append(
+                        (sid, delta))
 
-        dispatches = rows = padded = 0
-        serviced: Dict[Hashable, int] = {}
         for wlen, group in buckets.items():
             big = (group[0][1].matrix if len(group) == 1
                    else np.concatenate([d.matrix for _, d in group]))

@@ -181,14 +181,19 @@ def bursty(*, n_workers: int = 8, n_ticks: int = 8, window: int = 32,
 
 def mixed_windows(*, n_workers: int = 9, n_ticks: int = 6,
                   windows: Tuple[int, ...] = (16, 32, 64),
-                  seed: int = 0) -> FleetScenario:
-    """Heterogeneous window lengths: one dispatch per distinct length."""
+                  seed: int = 0,
+                  strides_per_tick: int = 1) -> FleetScenario:
+    """Heterogeneous window lengths: one dispatch per distinct length on the
+    bucketed path, ONE total on the fused path.  ``strides_per_tick`` scales
+    how many windows each stream completes per tick (capacity grows to
+    hold them), for benchmark sweeps over per-tick batch depth."""
     specs = []
     for i in range(n_workers):
         w = windows[i % len(windows)]
-        specs.append(StreamSpec(_sid(i), w, w // 2, 4 * w,
+        specs.append(StreamSpec(_sid(i), w, w // 2,
+                                max(4, 2 + strides_per_tick) * w,
                                 tenant=f"t{i % len(windows)}"))
-    chunk = {s.stream_id: s.window // 2 for s in specs}
+    chunk = {s.stream_id: (s.window // 2) * strides_per_tick for s in specs}
     times = {s.stream_id: _worker_times(n_ticks * chunk[s.stream_id], seed, i)
              for i, s in enumerate(specs)}
     events = tuple(

@@ -307,7 +307,7 @@ class ShardedVetMux:
         shards never share compiled functions, caches, or counters)."""
         return VetEngine(engine.backend, omega=engine.omega,
                          buckets=engine.buckets, cut_space=engine.cut_space,
-                         interpret=engine.interpret,
+                         interpret=engine.interpret, fused=engine.fused,
                          cache_size=engine._cache_size)
 
     def __repr__(self) -> str:

@@ -1,2 +1,6 @@
-"""Pallas TPU kernels (validated in interpret mode on CPU):
-changepoint (the paper's SSE scan), flash_attention, ssd."""
+"""Pallas TPU kernels: changepoint (the paper's SSE scan), windowvet (the
+fused block-sparse window-vet kernel), flash_attention, ssd.
+
+Interpret-vs-compiled is a platform policy, not a hardcoded flag:
+``runtime.resolve_interpret`` picks compiled on TPU and interpret mode
+elsewhere, with the ``REPRO_PALLAS_INTERPRET`` env var as the override."""

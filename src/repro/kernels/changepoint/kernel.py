@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..runtime import resolve_interpret
+
 __all__ = ["sse_scan", "DEFAULT_BLOCK"]
 
 DEFAULT_BLOCK = 1024
@@ -68,13 +70,17 @@ def _kernel(cy_ref, cyy_ref, cxy_ref, tot_ref, sse_ref, *, block: int, n: int,
 
 @functools.partial(jax.jit, static_argnames=("true_n", "omega", "block", "interpret"))
 def sse_scan(cy, cyy, cxy, totals, *, true_n: int, omega: int = 3,
-             block: int = DEFAULT_BLOCK, interpret: bool = True):
+             block: int = DEFAULT_BLOCK, interpret=None):
     """SSE for every candidate k from prefix sums (padded to a block multiple).
 
     cy/cyy/cxy: (n_padded,) f32 prefix sums (pad region repeats the totals);
     totals: (3,) f32 = [sum y, sum y^2, sum x*y]; true_n: unpadded length.
+    ``interpret=None`` resolves the platform policy (compiled on TPU,
+    interpret elsewhere; ``REPRO_PALLAS_INTERPRET`` overrides) at trace
+    time — pass an explicit bool to pin the mode.
     Returns sse: (n_padded,) f32 (+inf outside the probing window / padding).
     """
+    interpret = resolve_interpret(interpret)
     n = cy.shape[0]
     assert n % block == 0, (n, block)
     grid = (n // block,)

@@ -51,7 +51,7 @@ def _prefix_inputs(y_sorted, block):
 
 @functools.partial(jax.jit, static_argnames=("omega", "block", "interpret"))
 def two_segment_sse_pallas(y_sorted, omega: int = 3, block: int = DEFAULT_BLOCK,
-                           interpret: bool = True):
+                           interpret=None):
     cy, cyy, cxy, totals, n = _prefix_inputs(y_sorted, block)
     sse = sse_scan(cy, cyy, cxy, totals, true_n=n, omega=omega, block=block,
                    interpret=interpret)
@@ -60,8 +60,11 @@ def two_segment_sse_pallas(y_sorted, omega: int = 3, block: int = DEFAULT_BLOCK,
 
 @functools.partial(jax.jit, static_argnames=("omega", "block", "interpret"))
 def changepoint_pallas(y_sorted, omega: int = 3, block: int = DEFAULT_BLOCK,
-                       interpret: bool = True):
-    """t-hat (1-indexed prefix size), matching ``core.estimate_changepoint``."""
+                       interpret=None):
+    """t-hat (1-indexed prefix size), matching ``core.estimate_changepoint``.
+
+    ``interpret=None`` picks the platform default (compiled on TPU,
+    interpret elsewhere; ``REPRO_PALLAS_INTERPRET`` overrides)."""
     sse = two_segment_sse_pallas(y_sorted, omega=omega, block=block,
                                  interpret=interpret)
     return (jnp.argmin(sse) + 1).astype(jnp.int32)

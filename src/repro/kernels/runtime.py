@@ -1,0 +1,70 @@
+"""Shared Pallas runtime policy for the kernel packages.
+
+Every kernel here runs in one of two modes:
+
+- **compiled** — ``pl.pallas_call(..., interpret=False)``: the real Mosaic
+  lowering.  Only meaningful on a TPU host.
+- **interpret** — the kernel body is evaluated op-by-op by XLA on the host.
+  Bit-for-bit the semantics of the kernel jaxpr, so it doubles as the
+  *oracle* for the compiled path (the differential suites run it on CPU
+  containers).
+
+Historically each kernel hardcoded ``interpret=True`` — correct on the CPU
+containers the tests run on, silently wrong on a real TPU (the kernel would
+interpret instead of compile and the "kernel" benchmark numbers would be
+the interpreter's).  ``resolve_interpret`` centralizes the default:
+
+1. an explicit ``interpret=`` argument always wins;
+2. else the ``REPRO_PALLAS_INTERPRET`` environment variable (``1/true/yes``
+   forces interpret mode, ``0/false/no`` forces compiled — the escape hatch
+   for debugging a miscompile on TPU or smoke-testing lowering on CPU);
+3. else the platform: ``jax.default_backend()`` is probed once per process
+   — TPU hosts compile, everything else interprets.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+__all__ = ["resolve_interpret", "default_interpret"]
+
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
+ENV_VAR = "REPRO_PALLAS_INTERPRET"
+
+
+@functools.lru_cache(maxsize=None)
+def _platform_default() -> bool:
+    # Probed once per process: backend discovery is stable for its lifetime.
+    return jax.default_backend() != "tpu"
+
+
+def default_interpret() -> bool:
+    """The resolved process-wide default (env override, else platform)."""
+    env = os.environ.get(ENV_VAR)
+    if env is not None:
+        val = env.strip().lower()
+        if val in _TRUTHY:
+            return True
+        if val in _FALSY:
+            return False
+        raise ValueError(
+            f"{ENV_VAR}={env!r} is not a boolean; use one of "
+            f"{_TRUTHY + _FALSY}")
+    return _platform_default()
+
+
+def resolve_interpret(interpret=None) -> bool:
+    """Resolve an ``interpret=`` kernel argument to a concrete bool.
+
+    ``None`` (the kernel-op default) means "platform policy": compiled on
+    TPU, interpret elsewhere, overridable via ``REPRO_PALLAS_INTERPRET``.
+    An explicit bool passes through untouched.
+    """
+    if interpret is None:
+        return default_interpret()
+    return bool(interpret)

@@ -1,0 +1,15 @@
+"""Fused block-sparse window-vet kernel (kernel/ops/ref triple).
+
+``fused_window_vet`` vets an arbitrary ragged window set over a shared
+arena in one Pallas launch — sort, change-point scan, and EI/OC
+extrapolation fused per row, PR via shared f64 ring prefix sums.  See
+``kernel.py`` for the launch layout and the numerical contracts,
+``ref.py`` for the scalar oracle at the root of the differential ladder.
+"""
+
+from .kernel import BLOCK_ROWS, LANES, fused_window_vet_scan
+from .ops import fused_window_vet
+from .ref import ref_window_vet
+
+__all__ = ["BLOCK_ROWS", "LANES", "fused_window_vet",
+           "fused_window_vet_scan", "ref_window_vet"]

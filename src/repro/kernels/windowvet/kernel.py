@@ -1,0 +1,249 @@
+"""Fused Pallas window-vet kernel: ragged windows -> (vet, ei, oc, pr, t).
+
+One launch walks a shared **arena** (a stream's ring-buffer span, or several
+streams' spans concatenated) and emits the complete vet pipeline for every
+window in a block-sparse row set: row ``r`` covers arena records
+``[starts[r], starts[r] + lengths[r])``.  This retires the engine's
+one-dispatch-per-window-length rule — mixed-length window sets that the
+gather path had to bucket by shape become rows of one padded launch — and
+its O(windows x length) gather matrices: the kernel reads each window with a
+dynamic slice of the arena resident in VMEM, so staged memory is O(arena).
+
+Layout (the graphax ``BlockSparseTensor`` idiom: dense blocks + an index map
+describing where each block lives in the sparse whole):
+
+  grid   = (rows / BLOCK_ROWS,)
+  in     : arena (alen,) VMEM, replicated to every grid step
+           starts, lengths, pr, sq (BLOCK_ROWS,) per-step row metadata
+  out    : (BLOCK_ROWS, LANES) result lanes
+           [vet, ei, oc, pr, t, n, 0, 0]
+
+Per row the kernel fuses what used to be four dispatches worth of work:
+
+  slice -> bitonic sort -> prefix-sum SSE scan -> argmin cut -> capped
+  linear extrapolation -> EI/OC reduction
+
+Numerical contracts (the differential ladder leans on these):
+
+- **Sort-in-kernel.**  The bitonic network is exact: comparisons and
+  selects only, so the sorted rows are bitwise ``jnp.sort`` (+inf padding
+  sorts to the tail and is masked off).  This folds in the long-standing
+  "fused sort" kernel item — callers hand the kernel *raw* windows.
+- **Reference-rounding, padding-invariant scans.**  In interpret mode the
+  prefix sums are ``jnp.cumsum`` — the *same rounding* as the jnp reference
+  scan, so the SSE landscape tracks ``core.changepoint.two_segment_sse`` to
+  the ulp and near-tie argmins (1e-4-relative ties are routine on bucketed
+  log curves) never flip across the ladder.  ``jnp.cumsum``'s per-position
+  value is also independent of the padded row width (verified bitwise on
+  CPU), so a window vets identically whether launched from its own stream
+  (rows padded to its window) or from a coalesced mux / shard launch padded
+  to the fleet's longest window — which keeps sharded fleets equal to the
+  single-mux oracle.  The compiled path swaps in an unrolled Hillis-Steele
+  ladder (Mosaic has no cumsum primitive); it is padding-invariant by
+  construction — position ``i`` is final after ceil(log2(i+1)) steps, later
+  steps add shifted-in zeros — but its rounding differs from the reference
+  by a few ulp, so compiled-vs-interpret near-tie flips carry the same
+  documented caveat as ``kernels.changepoint``.
+- **Ring prefix sums.**  PR (and the raw-space SSE totals) come from f64
+  prefix sums (and prefix sums of squares) over the arena, computed once on
+  the host and handed in per row — overlapping windows share that work
+  instead of re-reducing their rows, and a window's PR is exact to f32
+  rounding rather than carrying f32 accumulation error across the window.
+- Everything else is f32 on the *uncentered* prefix sums, the same closed
+  forms as ``core.changepoint.two_segment_sse`` — reference-consistency
+  over absolute conditioning, exactly as ``kernels.changepoint`` documents.
+
+TPU caveat: per-row slice starts are read from the VMEM metadata block; a
+production TPU build would prefetch them to SMEM (PrefetchScalarGridSpec).
+The compiled path is best-effort on this CPU container — interpret mode is
+the tested oracle (see ``kernels.runtime``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fused_window_vet_scan", "BLOCK_ROWS", "LANES"]
+
+BLOCK_ROWS = 8  # rows (windows) per grid step
+LANES = 8  # output lanes per row: [vet, ei, oc, pr, t, n, pad, pad]
+
+_TINY = 1e-12  # matches core.vet._TINY (log-space floor)
+
+
+def _prefix_sum(x, *, reference_rounding: bool):
+    """Inclusive prefix sum along the last axis.
+
+    ``reference_rounding=True`` (interpret mode) uses ``jnp.cumsum`` — the
+    jnp reference scan's exact rounding, which is what keeps near-tie
+    argmins from flipping across the differential ladder.  The compiled
+    path unrolls a Hillis-Steele ladder instead (the width is static and
+    pow2); both are invariant to the padded row width — the additions
+    contributing to position ``i`` depend only on ``i`` — so differently
+    padded launches agree bitwise.
+    """
+    if reference_rounding:
+        return jnp.cumsum(x, axis=-1)
+    width = x.shape[-1]
+    d = 1
+    while d < width:
+        shifted = jnp.concatenate(
+            [jnp.zeros_like(x[..., :d]), x[..., :-d]], axis=-1)
+        x = x + shifted
+        d *= 2
+    return x
+
+
+def _bitonic_sort(x):
+    """Ascending bitonic sort of each row; width must be pow2.
+
+    Exact (compare/select only): bitwise ``jnp.sort`` per row.  +inf padding
+    sorts to the tail.
+    """
+    rows, width = x.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (rows, width), 1)
+    k = 2
+    while k <= width:
+        j = k // 2
+        while j >= 1:
+            partner = x.reshape(rows, -1, 2, j)[:, :, ::-1, :] \
+                .reshape(rows, width)
+            ascending = (iota & k) == 0
+            keep_min = ascending == ((iota & j) == 0)
+            x = jnp.where(keep_min, jnp.minimum(x, partner),
+                          jnp.maximum(x, partner))
+            j //= 2
+        k *= 2
+    return x
+
+
+def _seg_sse(n1, sx, sy, sxx, sxy, syy):
+    # Identical closed form to core.changepoint.segment_sse_terms.
+    n1 = jnp.maximum(n1, 1.0)
+    sxx_c = sxx - sx * sx / n1
+    sxy_c = sxy - sx * sy / n1
+    syy_c = syy - sy * sy / n1
+    safe = sxx_c > 0.0
+    sse = syy_c - jnp.where(safe,
+                            sxy_c * sxy_c / jnp.where(safe, sxx_c, 1.0), 0.0)
+    return jnp.maximum(sse, 0.0)
+
+
+def _pick(values, index):
+    """values[r, index[r]] via a masked reduction (no gather primitive)."""
+    rows, width = values.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (rows, width), 1)
+    return jnp.sum(jnp.where(iota == index[:, None], values, 0.0), axis=1)
+
+
+def _kernel(arena_ref, starts_ref, lengths_ref, pr_ref, sq_ref, out_ref, *,
+            lmax: int, block_rows: int, omega: int, log_space: bool,
+            reference_rounding: bool):
+    # ---- block-sparse load: one dynamic arena slice per row --------------
+    rows = [arena_ref[pl.ds(starts_ref[j], lmax)] for j in range(block_rows)]
+    y = jnp.stack(rows)  # (B, lmax) f32
+    n = lengths_ref[...]  # (B,) int32
+    pr = pr_ref[...]  # (B,) f32: f64 ring prefix-sum window totals
+    sq = sq_ref[...]  # (B,) f32: ... and totals of squares
+
+    iota = jax.lax.broadcasted_iota(jnp.int32, (block_rows, lmax), 1)
+    mask = iota < n[:, None]
+    nf = n.astype(jnp.float32)[:, None]
+
+    # ---- sort-in-kernel (exact) ------------------------------------------
+    y = _bitonic_sort(jnp.where(mask, y, jnp.inf))
+
+    # ---- change-point scan on the (optionally logged) sorted row ---------
+    if log_space:
+        z = jnp.log(jnp.maximum(y, _TINY))
+    else:
+        z = y
+    zm = jnp.where(mask, z, 0.0)
+    kf = (iota + 1).astype(jnp.float32)
+
+    cy = _prefix_sum(zm, reference_rounding=reference_rounding)
+    cyy = _prefix_sum(zm * zm, reference_rounding=reference_rounding)
+    cxy = _prefix_sum(kf * zm, reference_rounding=reference_rounding)
+
+    last = iota == n[:, None] - 1
+    if log_space:
+        tot_y = jnp.sum(jnp.where(last, cy, 0.0), axis=1)[:, None]
+        tot_yy = jnp.sum(jnp.where(last, cyy, 0.0), axis=1)[:, None]
+    else:
+        # Raw space: z is the window's raw times, so the totals are the ring
+        # prefix-sum (and prefix-sum-of-squares) differences — shared across
+        # overlapping windows, exact to f32 rounding.
+        tot_y = pr[:, None]
+        tot_yy = sq[:, None]
+    tot_xy = jnp.sum(jnp.where(last, cxy, 0.0), axis=1)[:, None]
+
+    sx1 = kf * (kf + 1.0) * 0.5
+    sxx1 = kf * (kf + 1.0) * (2.0 * kf + 1.0) / 6.0
+    sx_tot = nf * (nf + 1.0) * 0.5
+    sxx_tot = nf * (nf + 1.0) * (2.0 * nf + 1.0) / 6.0
+
+    sse1 = _seg_sse(kf, sx1, cy, sxx1, cxy, cyy)
+    sse2 = _seg_sse(nf - kf, sx_tot - sx1, tot_y - cy, sxx_tot - sxx1,
+                    tot_xy - cxy, tot_yy - cyy)
+
+    omf = jnp.float32(omega)
+    valid = (kf >= omf) & (kf <= nf - omf) & mask
+    sse = jnp.where(valid, sse1 + sse2, jnp.inf)
+    tb = (jnp.argmin(sse, axis=1) + 1).astype(jnp.int32)  # (B,) 1-indexed
+
+    # ---- capped linear extrapolation -> EI / OC --------------------------
+    i = jnp.clip(tb - 1, 1, n - 1)
+    anchor = _pick(y, i)
+    slope = jnp.maximum(anchor - _pick(y, i - 1), 0.0)
+    rank = iota + 1
+    prefix = rank <= tb[:, None]
+    g = anchor[:, None] + slope[:, None] * (rank - tb[:, None]) \
+        .astype(jnp.float32)
+    g = jnp.minimum(g, y)  # ideal never exceeds observed
+    ei = jnp.sum(jnp.where(mask, jnp.where(prefix, y, g), 0.0), axis=1)
+    oc = jnp.sum(jnp.where(mask, jnp.where(prefix, 0.0, y - g), 0.0), axis=1)
+
+    out = jnp.stack([pr / ei, ei, oc, pr, tb.astype(jnp.float32),
+                     nf[:, 0], jnp.zeros_like(ei), jnp.zeros_like(ei)],
+                    axis=1)
+    out_ref[...] = out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("lmax", "block_rows", "omega", "log_space", "interpret"))
+def fused_window_vet_scan(arena, starts, lengths, pr, sq, *, lmax: int,
+                          block_rows: int = BLOCK_ROWS, omega: int = 3,
+                          log_space: bool = True, interpret: bool = True):
+    """One fused launch over a padded block-sparse window set.
+
+    arena: (alen,) f32, alen pow2 and >= max(starts) + lmax (no slice clamp);
+    starts/lengths: (rows,) int32, rows a multiple of ``block_rows``;
+    pr/sq: (rows,) f32 window sums / sums of squares from the host's f64
+    arena prefix sums; lmax: pow2 padded window width.
+    Returns (rows, LANES) f32: [vet, ei, oc, pr, t, n, 0, 0] per row.
+    """
+    rows = starts.shape[0]
+    assert rows % block_rows == 0, (rows, block_rows)
+    grid = (rows // block_rows,)
+    kern = functools.partial(_kernel, lmax=lmax, block_rows=block_rows,
+                             omega=omega, log_space=log_space,
+                             reference_rounding=interpret)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(arena.shape, lambda i: (0,)),  # whole-arena VMEM
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=interpret,
+    )(arena, starts, lengths, pr, sq)

@@ -33,8 +33,10 @@ SCHEMAS = {
               "pallas", "dispatch_reduction", "scaling_1024",
               "mixed_windows"},
     "fleet_shard": {"backend", "n_lengths", "shards_list", "w256", "w1024"},
-    "kernels_bench": {"changepoint", "flash", "ssd", "vet_engine",
-                      "vet_engine_windowed", "vet_engine_streaming"},
+    "kernels_bench": {"changepoint", "flash", "ssd", "windowvet",
+                      "vet_engine", "vet_engine_windowed",
+                      "vet_engine_streaming"},
+    "windowvet": {"sliding", "w256", "w1024"},
     "fig1_gap": None,  # free-form payloads: presence + valid JSON only
     "fig3_spill": None,
     "fig9_tail": None,
@@ -58,6 +60,13 @@ FLEET_SHARD_ENTRY_KEYS = {"shards", "total_dispatches_per_tick",
                           "per_shard_max_dispatches_per_tick",
                           "per_shard_max_rows_per_tick", "tick_us",
                           "vet_job"}
+WINDOWVET_FLEET_KEYS = {"workers", "window_lengths", "n_ticks", "fused",
+                        "bucketed", "dispatch_reduction", "bytes_ratio"}
+WINDOWVET_PATH_KEYS = {"max_dispatches_per_tick", "peak_tick_bytes", "rows",
+                       "wall_s"}
+WINDOWVET_SLIDING_KEYS = {"n_records", "window", "stride", "num_windows",
+                          "fused_us", "gather_us", "staged_bytes",
+                          "materialized_bytes", "bytes_ratio"}
 
 
 def result_files():
@@ -209,6 +218,60 @@ def test_fleet_shard_per_shard_load_strictly_falls_at_1024_workers():
     for key in ("per_shard_max_dispatches_per_tick",
                 "per_shard_max_rows_per_tick"):
         assert shards["1"][key] > shards["2"][key] > shards["4"][key], key
+
+
+def windowvet_payload():
+    path = os.path.join(RESULTS_DIR, "windowvet.json")
+    if not os.path.exists(path):
+        pytest.skip("windowvet.json not generated on this machine")
+    return load("windowvet")
+
+
+def test_windowvet_sections_complete_and_finite():
+    payload = windowvet_payload()
+    missing = WINDOWVET_SLIDING_KEYS - set(payload["sliding"])
+    assert not missing, (
+        f"windowvet.json sliding stale: missing {sorted(missing)} — rerun "
+        f"`python -m benchmarks.run --only windowvet`")
+    for name in ("w256", "w1024"):
+        section = payload[name]
+        missing = WINDOWVET_FLEET_KEYS - set(section)
+        assert not missing, f"windowvet.json {name}: {sorted(missing)}"
+        for path_name in ("fused", "bucketed"):
+            entry = section[path_name]
+            missing = WINDOWVET_PATH_KEYS - set(entry)
+            assert not missing, f"{name}/{path_name}: {sorted(missing)}"
+            assert math.isfinite(entry["wall_s"]) and entry["wall_s"] > 0
+        assert section["fused"]["rows"] == section["bucketed"]["rows"]
+
+
+def test_windowvet_fused_tick_is_one_dispatch():
+    """The tentpole acceptance floor: a fused mux tick over a ragged
+    mixed-window fleet is exactly ONE kernel launch — not one per distinct
+    window length.  Dispatch counts are exact (``VetEngine.dispatches``),
+    so this cannot flake on a loaded machine."""
+    payload = windowvet_payload()
+    for name in ("w256", "w1024"):
+        section = payload[name]
+        assert section["fused"]["max_dispatches_per_tick"] == 1, name
+        assert (section["bucketed"]["max_dispatches_per_tick"]
+                == section["window_lengths"]), name
+
+
+def test_windowvet_fused_memory_strictly_below_materialized():
+    """The O(ring) claim, as a committed-artifact floor: the fused launch's
+    staged bytes (padded arena + per-row metadata) must be strictly below
+    the gather path's materialized O(windows x length) matrices — per tick
+    at fleet scale and on the dense sliding micro.  Byte counts are exact
+    ledgers, not timings."""
+    payload = windowvet_payload()
+    for name in ("w256", "w1024"):
+        section = payload[name]
+        assert (section["fused"]["peak_tick_bytes"]
+                < section["bucketed"]["peak_tick_bytes"]), name
+        assert section["bytes_ratio"] > 1.0, name
+    sliding = payload["sliding"]
+    assert sliding["staged_bytes"] < sliding["materialized_bytes"]
 
 
 def test_vet_engine_streaming_tick_is_incremental():
