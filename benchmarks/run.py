@@ -27,6 +27,8 @@ SUITES = [
     ("vet_engine", "Framework: VetEngine backend comparison (numpy/jax/pallas)"),
     ("fleet", "Framework: VetMux coalesced fleet ticks vs per-stream loop"),
     ("fleet_shard", "Framework: ShardedVetMux shard-scaling vs one mux"),
+    ("fleet_transport", "Framework: cross-process transport driver vs "
+     "in-process fleet, with kill+resume recovery"),
 ]
 
 

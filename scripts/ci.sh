@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 CI: docs gate (README/ARCHITECTURE present, public-surface doctests,
 # quickstart's sharded stanza), install test extras, run the streaming +
-# fleet + sharded-fleet + windowed vetting differential suites explicitly
+# fleet + sharded-fleet + transport + windowed vetting differential suites
+# explicitly
 # (with JUnit XML reports), then the full pytest suite, then a fast
 # VetEngine smoke benchmark (batch + windowed + streaming sections: backend
 # agreement, batched-vs-scalar speedup, cached-tick cost,
@@ -84,6 +85,20 @@ python -m pytest -q -x \
   tests/test_fleet_scenarios.py \
   || shard_status=$?
 
+# Cross-process transport: the process-driver differential + kill-mid-tick
+# recovery suites, under a hard timeout so a hung worker pool (a dead pipe
+# that never times out, a respawn loop) fails the stage fast instead of
+# wedging CI.  `timeout` sends TERM, then KILL 30s later if ignored.
+echo "[ci] transport: process-driver differential + crash-recovery suites"
+transport_status=0
+timeout -k 30 600 python -m pytest -q -x \
+  --junitxml="$REPORTS_DIR/transport.xml" \
+  tests/test_fleet_transport.py \
+  || transport_status=$?
+if [ "$transport_status" -eq 124 ]; then
+  echo "[ci] transport suite timed out (hung worker pool?)"
+fi
+
 # Windowed vetting next (same reasoning for the batched sliding/ragged path).
 echo "[ci] windowed vetting: differential + property + benchmark-smoke suites"
 windowed_status=0
@@ -119,6 +134,7 @@ python -m pytest -q \
   --ignore=tests/test_fleet_shard.py \
   --ignore=tests/test_fleet_shard_smoke.py \
   --ignore=tests/test_fleet_scenarios.py \
+  --ignore=tests/test_fleet_transport.py \
   --ignore=tests/test_vet_windows.py \
   --ignore=tests/test_vet_windows_properties.py \
   --ignore=tests/test_benchmarks_smoke.py \
@@ -141,6 +157,10 @@ fi
 if [ "$shard_status" -ne 0 ]; then
   echo "[ci] FAIL: sharded fleet suites exited $shard_status"
   exit "$shard_status"
+fi
+if [ "$transport_status" -ne 0 ]; then
+  echo "[ci] FAIL: transport suites exited $transport_status"
+  exit "$transport_status"
 fi
 if [ "$windowed_status" -ne 0 ]; then
   echo "[ci] FAIL: windowed vetting suites exited $windowed_status"

@@ -135,7 +135,15 @@ class VetEngine:
         self.omega = omega
         self.buckets = buckets
         self.cut_space = cut_space
-        self.interpret = resolve_interpret(interpret)
+        # Resolved lazily (property below): an explicit bool resolves here,
+        # but the platform-policy default defers the jax backend probe to
+        # the first kernel dispatch that needs it.  Constructing an engine
+        # must never trigger backend discovery — transport shard workers
+        # build engines right after spawn, where an eager probe would pay
+        # device discovery per worker (and can deadlock a fork()ed TPU
+        # child, see repro.kernels.runtime).
+        self._interpret_arg = None if interpret is None else bool(interpret)
+        self._interpret = self._interpret_arg
         self.fused = (backend == "pallas") if fused is None else bool(fused)
         self._batch_fn = None  # compiled lazily on first vet_batch
         # Backend dispatches ever issued (one per _vet_batch_impl /
@@ -162,6 +170,31 @@ class VetEngine:
     def __repr__(self) -> str:
         return (f"VetEngine(backend={self.backend!r}, omega={self.omega}, "
                 f"buckets={self.buckets}, cut_space={self.cut_space!r})")
+
+    @property
+    def interpret(self) -> bool:
+        """Resolved Pallas kernel mode (``repro.kernels.runtime`` policy:
+        explicit argument > ``REPRO_PALLAS_INTERPRET`` > platform probe).
+        The platform probe runs on first access, not at construction."""
+        if self._interpret is None:
+            self._interpret = resolve_interpret(None)
+        return self._interpret
+
+    def clone(self) -> "VetEngine":
+        """A fresh engine with this engine's configuration and *nothing*
+        else: no shared compiled functions, result cache, or counters.
+
+        The sharded fleet replicates its template engine this way (shards
+        model separate processes), and ``fleet.transport`` ships the same
+        recipe across real process boundaries (``EngineSpec``).  The
+        unresolved ``interpret`` argument is forwarded — not the resolved
+        bool — so a clone built in another process re-resolves its own
+        platform policy / environment override.
+        """
+        return VetEngine(self.backend, omega=self.omega, buckets=self.buckets,
+                         cut_space=self.cut_space,
+                         interpret=self._interpret_arg, fused=self.fused,
+                         cache_size=self._cache_size)
 
     # ------------------------------------------------------------- backends
     def _pallas_changepoint(self, z, omega: int = 3):

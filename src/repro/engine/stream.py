@@ -739,6 +739,75 @@ class VetStream:
         self._vetted = min(self._vetted, first_dirty)
         self._last = None
 
+    # ------------------------------------------------------- checkpointing
+    def state_dict(self) -> dict:
+        """Pickle-safe snapshot of the stream: ring, watermarks, retained
+        result rows, counters, and the fingerprint *digest*.
+
+        The transport layer (``repro.fleet.transport``) checkpoints shard
+        state with this so a killed worker process resumes mid-job.  The
+        rolling blake2b object itself cannot cross a process boundary (hash
+        objects do not pickle); the snapshot carries its hexdigest and
+        ``from_state`` chains a fresh rolling hash off it, so every
+        post-restore cache key is distinct from every key the original
+        stream ever issued — a restored stream can never collide with a
+        stale engine-cache entry.
+        """
+        lo = self._row_base - self._phys_base
+        n = self._vetted - self._phys_base
+        return {
+            "window": self.window, "stride": self.stride,
+            "capacity": self.capacity, "history": self.history,
+            "ring": self._ring.copy(), "total": self._total,
+            "vetted": self._vetted, "epoch": self._epoch,
+            "fingerprint": self.fingerprint,
+            "row_base": self._row_base,
+            "rows": {name: np.array(arr[lo:n])
+                     for name, arr in self._rows.items()},
+            "dirty_low": self._dirty_low,
+            "stats": (self._ticks, self._vetted_rows, self._reused_rows,
+                      self._evicted_rows),
+        }
+
+    @classmethod
+    def from_state(cls, engine: Optional[VetEngine], state: dict) \
+            -> "VetStream":
+        """Rebuild a stream from a ``state_dict`` snapshot, bound to
+        ``engine`` (typically a fresh per-process engine — caches rebuild
+        on demand).
+
+        The restored stream continues exactly where the snapshot stopped:
+        same pending windows, same retained rows (``collect()`` is bitwise
+        the snapshot's), same vetted watermark — so committed windows are
+        never re-vetted after a resume.
+        """
+        s = cls(engine, window=state["window"], stride=state["stride"],
+                capacity=state["capacity"], history=state["history"])
+        s._ring[:] = state["ring"]
+        s._total = state["total"]
+        s._vetted = state["vetted"]
+        s._epoch = state["epoch"]
+        # Chain the fresh rolling hash off the recorded digest (see
+        # state_dict): same prefix => same chain, but no raw-hash-state
+        # revival is needed.
+        s._fp.update(b"|resume|")
+        s._fp.update(state["fingerprint"].encode())
+        s._row_base = s._phys_base = state["row_base"]
+        retained = s._vetted - s._row_base
+        cap = max(_GROW, 2 * retained)
+        for name, arr in state["rows"].items():
+            grown = np.empty(cap, dtype=s._rows[name].dtype)
+            grown[:retained] = arr
+            s._rows[name] = grown
+        # Conservative: treat every restored row as already handed out, so
+        # any rewind over them copies-on-write instead of mutating storage
+        # the pre-crash process may have exposed.
+        s._exposed = s._vetted
+        s._dirty_low = state["dirty_low"]
+        (s._ticks, s._vetted_rows, s._reused_rows,
+         s._evicted_rows) = state["stats"]
+        return s
+
     def consume_rewind(self) -> Optional[int]:
         """Lowest row index re-vetted by ``amend``/``invalidate`` since the
         last call, or ``None``.  Incremental consumers that fold rows exactly

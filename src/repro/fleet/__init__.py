@@ -35,6 +35,14 @@ This package is the layer between the streams and the engine:
   merged into the job-level ``vet_job`` exactly as a cross-process reducer
   would (``tests/test_fleet_shard.py`` locks rows to the single-mux oracle
   and the merged vet_job to 1e-9).
+- ``TransportVetMux`` (``repro.fleet.transport``) moves those shards into
+  real worker processes behind the same surface: one long-lived worker per
+  shard driven over duplex pipes, retries with exponential backoff under a
+  retry budget, periodic checkpoint + command-journal resume so a shard
+  killed mid-tick recovers without re-vetting committed windows, and
+  per-shard accounting on every tick (``tests/test_fleet_transport.py``
+  locks the process driver to the in-process fleet across the scenario
+  bank, including kill-mid-tick recovery).
 
 Routed consumers: ``repro.sched.straggler.VetController`` (one mux across
 all workers — ``decide()`` is one coalesced dispatch set instead of a
@@ -52,20 +60,38 @@ from .scenarios import (
     play,
 )
 from .schedule import StreamRequest, TickPlan, plan_tick, split_budget
-from .shard import JobVet, ShardTick, ShardedVetMux, job_reduce, merge_job
+from .shard import (
+    JobVet,
+    ShardPlacer,
+    ShardTick,
+    ShardedVetMux,
+    job_reduce,
+    merge_job,
+)
+from .transport import (
+    EngineSpec,
+    ShardAccount,
+    TransportError,
+    TransportVetMux,
+)
 
 __all__ = [
     "SCENARIOS",
+    "EngineSpec",
     "FleetEvent",
     "FleetScenario",
     "JobVet",
     "MuxStats",
     "MuxTick",
+    "ShardAccount",
+    "ShardPlacer",
     "ShardTick",
     "ShardedVetMux",
     "StreamRequest",
     "StreamSpec",
     "TickPlan",
+    "TransportError",
+    "TransportVetMux",
     "VetMux",
     "build",
     "job_reduce",

@@ -48,7 +48,12 @@ __all__ = ["MuxStats", "MuxTick", "VetMux"]
 
 
 class MuxStats(NamedTuple):
-    """Lifetime counters for one mux (``VetMux.stats``)."""
+    """Lifetime counters for one mux (``VetMux.stats``).
+
+    The last two fields are transport accounting (``repro.fleet.transport``):
+    an in-process mux never retries or respawns anything, so they default
+    to 0 and only the cross-process driver reports non-zero values.
+    """
 
     ticks: int  # mux ticks
     dispatches: int  # coalesced engine dispatches issued
@@ -56,6 +61,35 @@ class MuxStats(NamedTuple):
     padded_rows: int  # pow2-padding overhead rows ever dispatched
     deferred: int  # window-row deferrals (sum over ticks)
     streams: int  # currently registered streams
+    retries: int = 0  # transport round trips re-attempted after a failure
+    respawns: int = 0  # shard worker processes restarted after a crash
+
+
+def _flush_loop(tick_fn, max_ticks: int):
+    """Shared flush driver for every mux variant (``VetMux``,
+    ``ShardedVetMux``, ``TransportVetMux``): tick until nothing is
+    deferred, performing **at most** ``max_ticks`` ticks total — the
+    initial tick included.  The variants used to decrement their own
+    ``max_ticks`` argument around the loop and disagreed about whether the
+    pre-loop tick counted; one helper, one boundary.
+
+    Raises:
+        ValueError: ``max_ticks < 1`` (a flush always ticks at least once).
+        RuntimeError: backlog still deferred after ``max_ticks`` ticks.
+    """
+    max_ticks = int(max_ticks)
+    if max_ticks < 1:
+        raise ValueError(f"flush needs max_ticks >= 1, got {max_ticks}")
+    tick = tick_fn()
+    done = 1
+    while tick.deferred:
+        if done >= max_ticks:
+            raise RuntimeError(
+                f"flush did not converge within {max_ticks} ticks — is new "
+                f"work arriving concurrently?")
+        tick = tick_fn()
+        done += 1
+    return tick
 
 
 class MuxTick(NamedTuple):
@@ -405,11 +439,52 @@ class VetMux:
             >>> mux.flush().deferred       # backlog drained, nothing lost
             {}
         """
-        tick = self.tick()
-        while tick.deferred:
-            max_ticks -= 1
-            if max_ticks <= 0:
-                raise RuntimeError("flush did not converge — is new work "
-                                   "arriving concurrently?")
-            tick = self.tick()
-        return tick
+        return _flush_loop(self.tick, max_ticks)
+
+    # ------------------------------------------------------ checkpointing
+    def state_dict(self) -> dict:
+        """Pickle-safe snapshot of the whole mux: every member stream's
+        state plus planner staleness and the lifetime counters.
+
+        The transport layer (``repro.fleet.transport``) checkpoints shard
+        workers with this so a killed process resumes mid-job without
+        re-vetting committed windows.  Engine state is deliberately *not*
+        captured: compiled functions and the result cache are per-process
+        artifacts that rebuild on demand — ``load_state_dict`` binds the
+        restored streams to the current mux's engine.
+        """
+        return {
+            "members": [
+                {"sid": sid, "priority": m.priority, "tenant": m.tenant,
+                 "staleness": m.staleness, "stream": m.stream.state_dict()}
+                for sid, m in self._members.items()
+            ],
+            "counters": {
+                "ticks": self._ticks, "dispatches": self._dispatches,
+                "rows": self._rows, "padded_rows": self._padded_rows,
+                "deferred": self._deferred,
+            },
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore a ``state_dict`` snapshot, replacing every member.
+
+        Registration order, staleness aging, pending windows, retained
+        rows and the vetted watermark all survive, so the next ``tick()``
+        continues exactly where the snapshot stopped — committed windows
+        are never re-vetted (the crash-recovery invariant the transport
+        suite locks with lifetime row/dispatch counters).
+        """
+        members: "OrderedDict[Hashable, _Member]" = OrderedDict()
+        for rec in state["members"]:
+            member = _Member(VetStream.from_state(self.engine, rec["stream"]),
+                             rec["priority"], rec["tenant"])
+            member.staleness = rec["staleness"]
+            members[rec["sid"]] = member
+        self._members = members
+        c = state["counters"]
+        self._ticks = c["ticks"]
+        self._dispatches = c["dispatches"]
+        self._rows = c["rows"]
+        self._padded_rows = c["padded_rows"]
+        self._deferred = c["deferred"]

@@ -159,8 +159,18 @@ def _waterfill(pool: int, demands: Sequence[int],
         if not active:
             break
         total_w = sum(weights[i] for i in active)
-        shares = {i: int(pool * weights[i] / total_w) for i in active}
-        for j in range(pool - sum(shares.values())):  # remainder, round-robin
+        # Floors of the proportional shares, clamped cumulatively to the
+        # pool: once pool * w_i / total_w is large enough that a float ulp
+        # exceeds 1, the floors alone can sum *above* the pool (the
+        # remainder below would go negative — an empty range() — and the
+        # round would silently over-allocate past the budget).
+        left = pool
+        shares = {}
+        for i in active:
+            s = min(int(pool * weights[i] / total_w), left)
+            shares[i] = s
+            left -= s
+        for j in range(left):  # remainder, round-robin
             shares[active[j % len(active)]] += 1
         granted = 0
         for i in active:

@@ -61,10 +61,11 @@ from typing import (
 import numpy as np
 
 from ..engine import VetEngine, VetStream
-from .mux import BatchVetResult, MuxStats, MuxTick, VetMux
+from .mux import BatchVetResult, MuxStats, MuxTick, VetMux, _flush_loop
 from .schedule import split_budget
 
-__all__ = ["JobVet", "ShardTick", "ShardedVetMux", "job_reduce", "merge_job"]
+__all__ = ["JobVet", "ShardPlacer", "ShardTick", "ShardedVetMux",
+           "job_reduce", "merge_job"]
 
 PLACEMENTS = ("pack", "round_robin")
 
@@ -163,7 +164,10 @@ class ShardTick(NamedTuple):
     mean the same things, merged over all shards), plus the per-shard
     breakdown: ``shards[k]`` is shard ``k``'s own ``MuxTick`` and
     ``budgets[k]`` the row budget it was water-filled for this tick
-    (``None`` = unbounded).
+    (``None`` = unbounded).  ``accounts`` is per-shard transport accounting
+    (round trips / retries / respawns / checkpoints / wall-clock) — empty
+    for the in-process fleet, populated by
+    ``fleet.transport.TransportVetMux``.
     """
 
     results: Dict[Hashable, Optional[BatchVetResult]]
@@ -175,6 +179,7 @@ class ShardTick(NamedTuple):
     padded_rows: int  # pow2 padding overhead rows across all shards
     shards: Tuple[MuxTick, ...]  # per-shard ticks, in shard order
     budgets: Tuple[Optional[int], ...]  # per-shard water-filled budgets
+    accounts: tuple = ()  # per-shard ShardAccount, transport driver only
 
     @property
     def job(self) -> JobVet:
@@ -194,6 +199,86 @@ class _Placement(NamedTuple):
     shard: int
     weight: int  # expected per-tick delta rows (bin-packing load unit)
     length: int  # window length (dispatch shape-bucket key)
+
+
+class ShardPlacer:
+    """Deterministic stream -> shard placement, shared by every fleet
+    driver.
+
+    Owns the registration census (placement records, per-shard load, and
+    per-shard window-length counts) that the ``"pack"`` policy packs
+    against.  ``ShardedVetMux`` (in-process shards) and
+    ``repro.fleet.transport.TransportVetMux`` (real worker processes) both
+    place through this class, so moving a fleet across the process boundary
+    reproduces the identical assignment — which is what lets the transport
+    differential suite compare the two drivers shard by shard.
+    """
+
+    def __init__(self, n_shards: int, policy: str = "pack"):
+        if policy not in PLACEMENTS:
+            raise ValueError(
+                f"placement must be one of {PLACEMENTS}, got {policy!r}")
+        self.n_shards = int(n_shards)
+        self.policy = policy
+        # sid -> (shard, weight, length), in registration order (the order
+        # ids()/tick results iterate in, mirroring a single mux).
+        self.placed: Dict[Hashable, _Placement] = {}
+        self.loads = [0] * self.n_shards  # sum of member weights per shard
+        # per shard: window length -> member count (dispatch bucket census)
+        self.lengths: List[Dict[int, int]] = [{} for _ in range(self.n_shards)]
+        self._rr = 0  # round_robin cursor (never rewound: deterministic)
+
+    @staticmethod
+    def delta_weight(window: int, stride: int, capacity: int) -> int:
+        """Expected per-tick delta rows, bounded by what the ring can hold
+        pending at once — the bin-packing load unit.  Identical geometry
+        => identical weight, so placement is a pure function of the
+        registration history."""
+        return max(1, (capacity - window) // stride + 1)
+
+    def choose(self, weight: int, length: int) -> int:
+        """Deterministic shard choice for a new stream; see the module
+        docstring for the two policies.  Pure: call ``add`` to record it."""
+        if self.policy == "round_robin":
+            k = self._rr % self.n_shards
+            self._rr += 1
+            return k
+        # "pack": greedy bin-pack by load, with window-length affinity — a
+        # shard already hosting this length is preferred unless it is more
+        # than one expected-delta heavier than the best alternative (then
+        # the length spills: balance beats bucket purity, but only just).
+        best, best_key = 0, None
+        for k in range(self.n_shards):
+            hosts = length in self.lengths[k]
+            cost = self.loads[k] + (0 if hosts else weight)
+            key = (cost, 0 if hosts else 1, k)
+            if best_key is None or key < best_key:
+                best, best_key = k, key
+        return best
+
+    def add(self, stream_id: Hashable, shard: int, weight: int,
+            length: int) -> None:
+        self.placed[stream_id] = _Placement(shard, weight, length)
+        self.loads[shard] += weight
+        self.lengths[shard][length] = self.lengths[shard].get(length, 0) + 1
+
+    def remove(self, stream_id: Hashable) -> _Placement:
+        placed = self.placed.pop(self.require(stream_id))
+        self.loads[placed.shard] -= placed.weight
+        census = self.lengths[placed.shard]
+        census[placed.length] -= 1
+        if census[placed.length] <= 0:
+            del census[placed.length]
+        return placed
+
+    def require(self, stream_id: Hashable) -> Hashable:
+        if stream_id not in self.placed:
+            raise KeyError(f"stream {stream_id!r} is not registered "
+                           f"({len(self.placed)} streams live)")
+        return stream_id
+
+    def shard_of(self, stream_id: Hashable) -> int:
+        return self.placed[self.require(stream_id)].shard
 
 
 class ShardedVetMux:
@@ -259,9 +344,6 @@ class ShardedVetMux:
                  tenant_weights: Optional[Dict[str, float]] = None,
                  urgent_headroom: int = 0,
                  placement: str = "pack"):
-        if placement not in PLACEMENTS:
-            raise ValueError(
-                f"placement must be one of {PLACEMENTS}, got {placement!r}")
         if engines is not None and engine is not None:
             raise ValueError("pass engines= (one per shard) or engine= "
                              "(a template), not both")
@@ -277,7 +359,7 @@ class ShardedVetMux:
             if shards < 1:
                 raise ValueError(f"shards must be >= 1, got {shards}")
             if engine is not None:
-                engines = [engine] + [self._replicate(engine)
+                engines = [engine] + [engine.clone()
                                       for _ in range(shards - 1)]
             else:
                 engines = [VetEngine(backend, buckets=64)
@@ -288,27 +370,20 @@ class ShardedVetMux:
                 raise ValueError(
                     f"budget must be >= 1 window row, got {budget}")
         self.budget = budget
-        self.placement = placement
+        self._placer = ShardPlacer(len(engines), placement)
         self._muxes = [VetMux(e, tenant_weights=tenant_weights,
                               urgent_headroom=urgent_headroom)
                        for e in engines]
-        # sid -> (shard, weight, length), in registration order (the order
-        # ids()/tick results iterate in, mirroring a single mux).
-        self._placed: Dict[Hashable, _Placement] = {}
-        self._loads = [0] * len(engines)  # sum of member weights per shard
-        # per shard: window length -> member count (dispatch bucket census)
-        self._lengths: List[Dict[int, int]] = [{} for _ in engines]
-        self._rr = 0  # round_robin cursor (never rewound: deterministic)
         self._ticks = 0
 
-    @staticmethod
-    def _replicate(engine: VetEngine) -> VetEngine:
-        """A fresh engine with the same configuration (per-shard isolation:
-        shards never share compiled functions, caches, or counters)."""
-        return VetEngine(engine.backend, omega=engine.omega,
-                         buckets=engine.buckets, cut_space=engine.cut_space,
-                         interpret=engine.interpret, fused=engine.fused,
-                         cache_size=engine._cache_size)
+    @property
+    def placement(self) -> str:
+        return self._placer.policy
+
+    @property
+    def _placed(self) -> Dict[Hashable, _Placement]:
+        # Registration-order placement records (the placer owns them).
+        return self._placer.placed
 
     def __repr__(self) -> str:
         return (f"ShardedVetMux(shards={self.n_shards}, "
@@ -335,43 +410,12 @@ class ShardedVetMux:
         return {sid: p.shard for sid, p in self._placed.items()}
 
     def shard_of(self, stream_id: Hashable) -> int:
-        return self._placed[self._require(stream_id)].shard
+        return self._placer.shard_of(stream_id)
 
     def _require(self, stream_id: Hashable) -> Hashable:
-        if stream_id not in self._placed:
-            raise KeyError(f"stream {stream_id!r} is not registered "
-                           f"({len(self._placed)} streams live)")
-        return stream_id
+        return self._placer.require(stream_id)
 
     # ------------------------------------------------------- registration
-    @staticmethod
-    def _delta_weight(window: int, stride: int, capacity: int) -> int:
-        # Expected per-tick delta rows, bounded by what the ring can hold
-        # pending at once — the bin-packing load unit.  Identical geometry
-        # => identical weight, so placement is a pure function of the
-        # registration history.
-        return max(1, (capacity - window) // stride + 1)
-
-    def _place(self, weight: int, length: int) -> int:
-        """Deterministic shard choice for a new stream; see the module
-        docstring for the two policies."""
-        if self.placement == "round_robin":
-            k = self._rr % self.n_shards
-            self._rr += 1
-            return k
-        # "pack": greedy bin-pack by load, with window-length affinity — a
-        # shard already hosting this length is preferred unless it is more
-        # than one expected-delta heavier than the best alternative (then
-        # the length spills: balance beats bucket purity, but only just).
-        best, best_key = 0, None
-        for k in range(self.n_shards):
-            hosts = length in self._lengths[k]
-            cost = self._loads[k] + (0 if hosts else weight)
-            key = (cost, 0 if hosts else 1, k)
-            if best_key is None or key < best_key:
-                best, best_key = k, key
-        return best
-
     def register(self, stream_id: Hashable, *, window: Optional[int] = None,
                  stride: int = 1, capacity: Optional[int] = None,
                  history: Optional[int] = None, priority: float = 0.0,
@@ -405,8 +449,8 @@ class ShardedVetMux:
                     "engines (coalesced dispatches run on one engine per "
                     "shard); build it with VetStream(fleet.shard(k).engine, "
                     "...) or let register() create it")
-            weight = self._delta_weight(stream.window, stream.stride,
-                                        stream.capacity)
+            weight = ShardPlacer.delta_weight(stream.window, stream.stride,
+                                              stream.capacity)
             length = stream.window
         else:
             if window is None:
@@ -415,16 +459,13 @@ class ShardedVetMux:
                     "stream= (to attach an existing one)")
             window = int(window)
             cap = int(capacity) if capacity is not None else 4 * window
-            weight = self._delta_weight(window, int(stride), cap)
+            weight = ShardPlacer.delta_weight(window, int(stride), cap)
             length = window
-            shard = self._place(weight, length)
+            shard = self._placer.choose(weight, length)
         out = self._muxes[shard].register(
             stream_id, window=window, stride=stride, capacity=capacity,
             history=history, priority=priority, tenant=tenant, stream=stream)
-        self._placed[stream_id] = _Placement(shard, weight, length)
-        self._loads[shard] += weight
-        self._lengths[shard][length] = \
-            self._lengths[shard].get(length, 0) + 1
+        self._placer.add(stream_id, shard, weight, length)
         return out
 
     def deregister(self, stream_id: Hashable) -> VetStream:
@@ -434,12 +475,7 @@ class ShardedVetMux:
         next ``register`` re-balances toward the vacated shard — the same
         churn history always reproduces the same assignment.
         """
-        placed = self._placed.pop(self._require(stream_id))
-        self._loads[placed.shard] -= placed.weight
-        census = self._lengths[placed.shard]
-        census[placed.length] -= 1
-        if census[placed.length] <= 0:
-            del census[placed.length]
+        placed = self._placer.remove(stream_id)
         return self._muxes[placed.shard].deregister(stream_id)
 
     def stream(self, stream_id: Hashable) -> VetStream:
@@ -532,15 +568,19 @@ class ShardedVetMux:
     def flush(self, max_ticks: int = 1_000_000) -> ShardTick:
         """Tick until no shard has deferred work; returns the last tick.
 
+        Performs at most ``max_ticks`` ticks, the first one included —
+        the same boundary as ``VetMux.flush`` (shared loop).
+
         Raises:
+            ValueError: ``max_ticks < 1``.
             RuntimeError: when the backlog does not converge within
-                ``max_ticks`` (new work arriving concurrently).
+                ``max_ticks`` ticks (new work arriving concurrently).
         """
-        tick = self.tick()
-        while tick.deferred:
-            max_ticks -= 1
-            if max_ticks <= 0:
-                raise RuntimeError("flush did not converge — is new work "
-                                   "arriving concurrently?")
-            tick = self.tick()
-        return tick
+        return _flush_loop(self.tick, max_ticks)
+
+    def close(self) -> None:
+        """Release fleet resources — a no-op here, where every shard lives
+        in this process.  Surface symmetry with
+        ``fleet.transport.TransportVetMux.close()`` (which terminates its
+        worker processes), so consumers can hold either mux and always
+        close it."""

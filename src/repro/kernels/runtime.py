@@ -17,30 +17,77 @@ the interpreter's).  ``resolve_interpret`` centralizes the default:
 1. an explicit ``interpret=`` argument always wins;
 2. else the ``REPRO_PALLAS_INTERPRET`` environment variable (``1/true/yes``
    forces interpret mode, ``0/false/no`` forces compiled — the escape hatch
-   for debugging a miscompile on TPU or smoke-testing lowering on CPU);
+   for debugging a miscompile on TPU or smoke-testing lowering on CPU).
+   Child processes inherit the parent's environment, so exporting it is
+   also the blanket *worker-side* override for the transport layer
+   (``repro.fleet.transport``) — every shard worker resolves the same mode
+   without any probe;
 3. else the platform: ``jax.default_backend()`` is probed once per process
    — TPU hosts compile, everything else interprets.
+
+The platform probe is **lazy and fork-safe**: it runs on the first kernel
+dispatch that actually needs it, never at import or engine-construction
+time.  Backend discovery spins up threads (and on TPU touches the device
+runtime), so a probe baked into a constructor would fire inside every
+transport worker the moment it builds its engine — and a ``fork()``ed
+child re-running discovery mid-probe can deadlock TPU initialization.
+Workers instead inherit the parent's already-resolved policy via
+``seed_platform_default`` and never probe at all.
 """
 
 from __future__ import annotations
 
-import functools
 import os
+from typing import Optional
 
 import jax
 
-__all__ = ["resolve_interpret", "default_interpret"]
+__all__ = [
+    "resolve_interpret",
+    "default_interpret",
+    "seed_platform_default",
+    "platform_default_hint",
+]
 
 _TRUTHY = ("1", "true", "yes", "on")
 _FALSY = ("0", "false", "no", "off")
 
 ENV_VAR = "REPRO_PALLAS_INTERPRET"
 
+# Memoized platform policy.  None = not probed yet; the probe is deferred
+# to the first resolve that needs it (module state instead of lru_cache so
+# a worker process can be seeded without triggering the probe — see
+# seed_platform_default).
+_PLATFORM: Optional[bool] = None
 
-@functools.lru_cache(maxsize=None)
+
 def _platform_default() -> bool:
     # Probed once per process: backend discovery is stable for its lifetime.
-    return jax.default_backend() != "tpu"
+    global _PLATFORM
+    if _PLATFORM is None:
+        _PLATFORM = jax.default_backend() != "tpu"
+    return _PLATFORM
+
+
+def seed_platform_default(interpret: Optional[bool]) -> None:
+    """Install a pre-resolved platform policy without probing.
+
+    The transport driver calls this in every shard worker with the parent
+    process's already-memoized policy (``platform_default_hint()``), so
+    workers never run backend discovery themselves — the fork-safety half
+    of the lazy-probe contract.  ``None`` (parent never probed either)
+    leaves the lazy probe armed.  ``REPRO_PALLAS_INTERPRET`` still wins
+    over the seed: ``default_interpret`` checks the environment first.
+    """
+    global _PLATFORM
+    if interpret is not None:
+        _PLATFORM = bool(interpret)
+
+
+def platform_default_hint() -> Optional[bool]:
+    """This process's memoized platform policy, or ``None`` if it has never
+    been probed (nor seeded) — what a driver forwards to its workers."""
+    return _PLATFORM
 
 
 def default_interpret() -> bool:

@@ -24,7 +24,7 @@ import numpy as np
 
 from ..configs import get_config
 from ..engine import BatchVetResult, VetEngine, default_engine
-from ..fleet import ShardedVetMux
+from ..fleet import ShardedVetMux, TransportVetMux
 from ..models import decode_step, init_cache, init_params, prefill
 from ..profiling import RecordProfiler
 
@@ -61,6 +61,7 @@ def serve(
     verbose: bool = True,
     engine: Optional[VetEngine] = None,
     shards: int = 1,
+    transport: bool = False,
 ) -> ServeResult:
     cfg = get_config(cfg_or_name) if isinstance(cfg_or_name, str) else cfg_or_name
     if not cfg.supports_decode:
@@ -92,59 +93,79 @@ def serve(
     # a single shard, and a multi-host deployment raises ``shards`` so each
     # serving process keeps its own engine while the dashboard reads the
     # shard-merged job reduction (``tick.vet_job``).
-    mux = ShardedVetMux(shards,
-                        engine=(engine if engine is not None
-                                else default_engine("jax", buckets=64)))
-    # The drift view keeps the newest _SNAPSHOT_HISTORY windows: plenty for
-    # any one generation, bounded for a serve loop that lives forever.
-    stream = mux.register("decode", window=_SNAPSHOT_WINDOW,
-                          stride=_SNAPSHOT_WINDOW,
-                          capacity=4 * _SNAPSHOT_WINDOW,
-                          history=_SNAPSHOT_HISTORY)
-    fed_units = 0
-    vet_s = 0.0  # estimation overhead, excluded from the throughput wall
-    out = [tok]
-    for i in range(gen_len - 1):
-        with prof.record():
-            logits, cache = step_fn(params, cache, tok, jnp.asarray(prompt_len + i))
-            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-            tok.block_until_ready()
-        out.append(tok)
-        if prof.num_records % record_unit == 0:
-            tv = time.perf_counter()
-            # O(new units) extraction + incremental tick: only the windows
-            # this unit completed are vetted.
-            new_units = prof.unit_times(start=fed_units)
-            mux.feed("decode", new_units)
-            fed_units += new_units.size
-            mux.tick()
-            vet_s += time.perf_counter() - tv
-    wall = time.perf_counter() - t0 - vet_s
-    gen = np.asarray(jnp.concatenate(out, axis=1))
+    if transport:
+        # Cross-process fleet: each shard mux lives in its own worker
+        # process behind retries + checkpoint/resume (repro.fleet.transport)
+        # — the decode loop keeps vetting through worker crashes.
+        mux = TransportVetMux(shards,
+                              engine=(engine if engine is not None
+                                      else default_engine("jax", buckets=64)))
+    else:
+        mux = ShardedVetMux(shards,
+                            engine=(engine if engine is not None
+                                    else default_engine("jax", buckets=64)))
+    try:
+        # The drift view keeps the newest _SNAPSHOT_HISTORY windows: plenty
+        # for any one generation, bounded for a serve loop that lives
+        # forever.  (Under transport the stream lives in the worker, so
+        # register's return value is the shard index, not the stream.)
+        stream = mux.register("decode", window=_SNAPSHOT_WINDOW,
+                              stride=_SNAPSHOT_WINDOW,
+                              capacity=4 * _SNAPSHOT_WINDOW,
+                              history=_SNAPSHOT_HISTORY)
+        fed_units = 0
+        vet_s = 0.0  # estimation overhead, excluded from the throughput wall
+        out = [tok]
+        for i in range(gen_len - 1):
+            with prof.record():
+                logits, cache = step_fn(params, cache, tok, jnp.asarray(prompt_len + i))
+                tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+                tok.block_until_ready()
+            out.append(tok)
+            if prof.num_records % record_unit == 0:
+                tv = time.perf_counter()
+                # O(new units) extraction + incremental tick: only the
+                # windows this unit completed are vetted.
+                new_units = prof.unit_times(start=fed_units)
+                mux.feed("decode", new_units)
+                fed_units += new_units.size
+                mux.tick()
+                vet_s += time.perf_counter() - tv
+        wall = time.perf_counter() - t0 - vet_s
+        gen = np.asarray(jnp.concatenate(out, axis=1))
 
-    vet = ei = pr = None
-    windows = None
-    times = prof.unit_times()
-    if times.size >= 16:
-        if engine is None:
-            # pre-engine call-site convention: bucket count adapts to the
-            # profile size so short runs keep the bucketed estimator
-            engine = default_engine("jax", buckets=min(64, times.size // 4))
-        r = engine.vet_one(times)
-        vet, ei, pr = float(r.vet), float(r.ei), float(r.pr)
-        if verbose:
-            print(f"[serve] vet={vet:.3f} EI={ei:.4f}s PR={pr:.4f}s")
-        mux.feed("decode", times[fed_units:])  # trailing units after the loop
-        win = mux.tick().results["decode"]
-        if win is not None and win.workers >= 2:
-            windows = win
+        vet = ei = pr = None
+        windows = None
+        times = prof.unit_times()
+        if times.size >= 16:
+            if engine is None:
+                # pre-engine call-site convention: bucket count adapts to the
+                # profile size so short runs keep the bucketed estimator
+                engine = default_engine("jax", buckets=min(64, times.size // 4))
+            r = engine.vet_one(times)
+            vet, ei, pr = float(r.vet), float(r.ei), float(r.pr)
             if verbose:
-                ws = " ".join(f"{v:.2f}" for v in windows.vet)
-                st = stream.stats
-                ms = mux.stats
-                print(f"[serve] window vets: {ws} "
-                      f"({st.vetted} vetted / {st.reused} reused rows over "
-                      f"{ms.ticks} mux ticks / {ms.dispatches} dispatches)")
+                print(f"[serve] vet={vet:.3f} EI={ei:.4f}s PR={pr:.4f}s")
+            mux.feed("decode", times[fed_units:])  # trailing units after loop
+            mux.tick()
+            # Transport ticks only carry newest-window rows; the retained
+            # drift history comes from the bulk path either way.
+            win = (mux.collect("decode") if transport
+                   else mux.stream("decode").collect())
+            if win is not None and win.workers >= 2:
+                windows = win
+                if verbose:
+                    ws = " ".join(f"{v:.2f}" for v in windows.vet)
+                    ms = mux.stats
+                    detail = (f"{ms.respawns} respawns" if transport else
+                              f"{stream.stats.vetted} vetted / "
+                              f"{stream.stats.reused} reused rows")
+                    print(f"[serve] window vets: {ws} "
+                          f"({detail} over {ms.ticks} mux ticks / "
+                          f"{ms.dispatches} dispatches)")
+    finally:
+        if transport:
+            mux.close()
     tps = batch * gen_len / wall
     if verbose:
         print(f"[serve] {batch}x{gen_len} tokens in {wall:.2f}s = {tps:.1f} tok/s")
@@ -159,11 +180,17 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=64)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="partition the vet fleet across N shard muxes")
+    ap.add_argument("--transport", action="store_true",
+                    help="run each shard mux in its own worker process "
+                         "(retries + checkpoint/resume)")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    serve(cfg, batch=args.batch, prompt_len=args.prompt_len, gen_len=args.gen_len)
+    serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
+          gen_len=args.gen_len, shards=args.shards, transport=args.transport)
 
 
 if __name__ == "__main__":

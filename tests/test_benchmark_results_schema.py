@@ -33,6 +33,9 @@ SCHEMAS = {
               "pallas", "dispatch_reduction", "scaling_1024",
               "mixed_windows"},
     "fleet_shard": {"backend", "n_lengths", "shards_list", "w256", "w1024"},
+    "fleet_transport": {"workers", "shards", "steps", "backend",
+                        "inprocess_sharded_tick_us", "inprocess_driver",
+                        "process_driver", "kill_resume", "oracle"},
     "kernels_bench": {"changepoint", "flash", "ssd", "windowvet",
                       "vet_engine", "vet_engine_windowed",
                       "vet_engine_streaming"},
@@ -284,3 +287,48 @@ def test_vet_engine_streaming_tick_is_incremental():
     without turning timing noise into tier-1 flakes."""
     payload = vet_engine_payload()
     assert payload["streaming"]["stream_speedup_vs_regather"] >= 2.0
+
+
+def fleet_transport_payload():
+    path = os.path.join(RESULTS_DIR, "fleet_transport.json")
+    if not os.path.exists(path):
+        pytest.skip("fleet_transport.json not generated on this machine")
+    return load("fleet_transport")
+
+
+TRANSPORT_DRIVER_KEYS = {"tick_us", "vet_job_abs_err", "dispatches", "rows",
+                         "retries", "respawns"}
+
+
+def test_fleet_transport_sections_complete_and_exact():
+    """Both transport drivers must reproduce the in-process oracle exactly
+    on the committed artifact: vet_job at 1e-9 and identical lifetime
+    dispatch/row counters (every window vetted exactly once), with zero
+    transport work on a healthy run.  Timings are environment noise and
+    are deliberately not pinned."""
+    payload = fleet_transport_payload()
+    oracle = payload["oracle"]
+    for name in ("inprocess_driver", "process_driver"):
+        section = payload[name]
+        missing = TRANSPORT_DRIVER_KEYS - set(section)
+        assert not missing, (
+            f"fleet_transport.json {name} stale: missing {sorted(missing)} "
+            f"— rerun `python -m benchmarks.run --only fleet_transport`")
+        assert section["vet_job_abs_err"] <= 1e-9, name
+        assert section["dispatches"] == oracle["dispatches"], name
+        assert section["rows"] == oracle["rows"], name
+        assert section["retries"] == 0 and section["respawns"] == 0, name
+
+
+def test_fleet_transport_kill_resume_recovers_exactly_once():
+    """The acceptance artifact: a worker killed mid-tick is respawned
+    exactly once, the retried tick lands, and the merged vet_job matches
+    the oracle at 1e-9 with no dispatch/row drift — a re-vetted or skipped
+    window would show up as a counter mismatch."""
+    payload = fleet_transport_payload()
+    kr, oracle = payload["kill_resume"], payload["oracle"]
+    assert kr["vet_job_abs_err"] <= 1e-9
+    assert kr["respawns"] == 1 and kr["retries"] >= 1
+    assert kr["dispatches"] == oracle["dispatches"]
+    assert kr["rows"] == oracle["rows"]
+    assert kr["shard0_checkpoints"] >= 1

@@ -267,6 +267,46 @@ class TestTickPlanner:
             plan_tick([self.req("a", 1, tenant="t")], budget=1,
                       tenant_weights={"t": 0.0})
 
+    def test_adversarial_float_weights_never_overgrant_the_budget(self):
+        """Waterfill regression: at pools this large a float ulp of
+        ``pool * w / total_w`` exceeds 1, so the unclamped floors summed
+        *above* the pool and the planner granted more rows than the budget
+        (28 extra here).  The clamp pins the grant to exactly the budget."""
+        pool = 699606058459349848
+        w = [0.2122188106686006, 0.035734441736370415,
+             0.6812461849926625, 0.9997187959452691]
+        reqs = [self.req(f"s{i}", pool, tenant=f"t{i}") for i in range(4)]
+        plan = plan_tick(reqs, budget=pool,
+                         tenant_weights={f"t{i}": w[i] for i in range(4)})
+        assert plan.total_rows == pool
+        assert all(0 <= n <= pool for n in plan.serve.values())
+
+
+class TestFlushBoundary:
+    """``flush(max_ticks=N)`` performs at most N ticks, the first included
+    — the boundary the sharded and transport muxes share via the same
+    helper."""
+
+    def _backlog(self):
+        # 9 pending windows at budget 2: convergence takes exactly 5 ticks.
+        mux = VetMux(VetEngine("numpy", buckets=64), budget=2)
+        mux.register("a", window=8, stride=4, capacity=256)
+        mux.feed("a", np.linspace(1e-3, 2e-3, 40))
+        return mux
+
+    def test_flush_converges_exactly_at_the_boundary(self):
+        mux = self._backlog()
+        last = mux.flush(max_ticks=5)
+        assert not last.deferred and mux.stats.ticks == 5
+
+    def test_flush_raises_when_the_boundary_is_one_short(self):
+        with pytest.raises(RuntimeError, match="did not converge within 4"):
+            self._backlog().flush(max_ticks=4)
+
+    def test_flush_rejects_a_nonpositive_boundary(self):
+        with pytest.raises(ValueError, match="max_ticks"):
+            self._backlog().flush(max_ticks=0)
+
 
 # ---------------------------------------------------- mux aging/urgency
 class TestMuxScheduling:

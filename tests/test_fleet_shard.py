@@ -319,6 +319,35 @@ class TestShardBudget:
         with pytest.raises(ValueError, match="length"):
             split_budget(4, [1, 1], weights=[1.0])
 
+    def test_split_budget_adversarial_float_weights_stay_in_budget(self):
+        """Waterfill regression: with a pool large enough that a float ulp
+        of ``pool * w / total_w`` exceeds 1, the unclamped floors summed 28
+        rows above the pool and the round silently over-allocated (the
+        remainder ``range()`` went empty instead of negative).  The shares
+        are now clamped cumulatively to the pool."""
+        pool = 699606058459349848
+        weights = [0.2122188106686006, 0.035734441736370415,
+                   0.6812461849926625, 0.9997187959452691]
+        alloc = split_budget(pool, [pool] * 4, weights=weights)
+        assert sum(alloc) == pool
+        assert all(0 <= a <= pool for a in alloc)
+
+    def test_flush_tick_boundary_is_pinned(self):
+        """Same inclusive ``max_ticks`` boundary as ``VetMux.flush`` (shared
+        helper): a 9-window backlog at job budget 2 converges in exactly 5
+        ticks, one fewer raises, zero is rejected."""
+        def backlog():
+            smux = ShardedVetMux(2, backend="numpy", budget=2)
+            smux.register("a", window=8, stride=4, capacity=256)
+            smux.feed("a", np.linspace(1e-3, 2e-3, 40))
+            return smux
+        last = backlog().flush(max_ticks=5)
+        assert not last.deferred
+        with pytest.raises(RuntimeError, match="did not converge within 4"):
+            backlog().flush(max_ticks=4)
+        with pytest.raises(ValueError, match="max_ticks"):
+            backlog().flush(max_ticks=0)
+
     def test_urgent_streams_still_served_past_the_job_budget(self):
         """Ring-overrun urgency is a per-shard correctness rail: a stream at
         the edge of its ring is drained in full regardless of the slice."""
