@@ -1,0 +1,122 @@
+"""Anomaly-monitor overhead + detection quality accounting.
+
+Two questions priced here:
+
+- **What does live monitoring cost?**  The same 256-worker fleet tick is
+  driven with the monitor on and off; the delta is the per-tick price of
+  scanning every stream's vet ring with the change-point machinery.  Numpy
+  backend and method: the point is the monitor loop, not the kernels.
+- **How fast and how accurately does it flag?**  Every scenario in the
+  anomaly bank is played through a monitored mux; the committed artifact
+  records, per scenario, how many affected streams were detected, the
+  localization error of each first flag against the injected onset, the
+  flag latency (ticks from injected onset to the tick the flag was
+  raised — confirmation costs a couple of ticks by design), and how many
+  unaffected streams ever flagged.
+
+Wall-clock numbers are environment-dependent and not pinned; the detection
+quality fields are pinned by ``tests/test_benchmark_results_schema.py``
+(every affected stream detected, onset error within the bank's +/-2-tick
+tolerance, zero false flags).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.engine import VetEngine
+from repro.fleet import VetMux, build
+from repro.fleet.scenarios import ANOMALY_SCENARIOS
+
+from .common import emit, save_json
+
+SEED = 1  # the bank's differential seed (see tests/test_fleet_anomaly.py)
+OVERHEAD_WORKERS = 256
+OVERHEAD_TICKS = 8
+OVERHEAD_CHUNK = 64  # one complete window per worker per tick
+
+
+def _detection_quality(name: str) -> Dict:
+    sc = build(name, seed=SEED)
+    mux = VetMux(VetEngine("numpy", buckets=64))
+    for s in sc.specs:
+        s.register(mux)
+    firsts: Dict = {}  # sid -> (flag, tick index raised)
+    for k, ev in enumerate(sc.events):
+        for sid, chunk in ev.chunks.items():
+            mux.feed(sid, chunk)
+        for f in mux.tick().flags:
+            firsts.setdefault(f.stream_id, (f, k))
+    affected = set(sc.affected)
+    errs = [abs(f.onset - sc.onset_tick)
+            for sid, (f, _) in firsts.items() if sid in affected]
+    lats = [k - sc.onset_tick
+            for sid, (f, k) in firsts.items() if sid in affected]
+    return {
+        "onset_tick": sc.onset_tick,
+        "n_affected": len(affected),
+        "detected": len(errs),
+        "false_flags": len(set(firsts) - affected),
+        "mean_onset_err_ticks": float(np.mean(errs)) if errs else None,
+        "max_onset_err_ticks": int(max(errs)) if errs else None,
+        "mean_flag_latency_ticks": float(np.mean(lats)) if lats else None,
+        "max_flag_latency_ticks": int(max(lats)) if lats else None,
+    }
+
+
+def _overhead_tick_us(monitor: bool) -> float:
+    """Steady-state per-tick wall microseconds for a 256-worker fleet."""
+    rng = np.random.default_rng(7)
+    mux = VetMux(VetEngine("numpy", buckets=64), monitor=monitor)
+    for w in range(OVERHEAD_WORKERS):
+        mux.register(f"w{w:04d}", window=OVERHEAD_CHUNK,
+                     stride=OVERHEAD_CHUNK, capacity=4 * OVERHEAD_CHUNK)
+    chunks = rng.standard_normal(
+        (OVERHEAD_WORKERS, OVERHEAD_TICKS, OVERHEAD_CHUNK)) ** 2 + 1e-3
+    walls = []
+    for k in range(OVERHEAD_TICKS):
+        for w in range(OVERHEAD_WORKERS):
+            mux.feed(f"w{w:04d}", chunks[w, k])
+        t0 = time.perf_counter()
+        mux.tick()
+        walls.append(time.perf_counter() - t0)
+    steady = walls[1:]  # first tick pays ring/row growth
+    return sum(steady) / len(steady) * 1e6
+
+
+def run() -> Dict:
+    out: Dict = {
+        "seed": SEED,
+        "backend": "numpy",
+        "method": "numpy",
+        "tolerance_ticks": 2,
+        "scenarios": {},
+    }
+    for name in sorted(ANOMALY_SCENARIOS):
+        q = _detection_quality(name)
+        out["scenarios"][name] = q
+        emit(f"fleet_anomaly/{name}",
+             0.0 if q["mean_flag_latency_ticks"] is None
+             else q["mean_flag_latency_ticks"],
+             f"detected={q['detected']}/{q['n_affected']};"
+             f"max_err={q['max_onset_err_ticks']};"
+             f"false={q['false_flags']}")
+
+    on_us = _overhead_tick_us(True)
+    off_us = _overhead_tick_us(False)
+    out["overhead_256w"] = {
+        "workers": OVERHEAD_WORKERS,
+        "ticks": OVERHEAD_TICKS,
+        "monitor_on_tick_us": on_us,
+        "monitor_off_tick_us": off_us,
+        "overhead_us": on_us - off_us,
+        "overhead_pct": 100.0 * (on_us - off_us) / off_us,
+    }
+    emit(f"fleet_anomaly/overhead_{OVERHEAD_WORKERS}w", on_us - off_us,
+         f"on={on_us:.0f}us;off={off_us:.0f}us;"
+         f"pct={out['overhead_256w']['overhead_pct']:.1f}")
+    save_json("fleet_anomaly", out)
+    return out

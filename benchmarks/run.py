@@ -29,6 +29,8 @@ SUITES = [
     ("fleet_shard", "Framework: ShardedVetMux shard-scaling vs one mux"),
     ("fleet_transport", "Framework: cross-process transport driver vs "
      "in-process fleet, with kill+resume recovery"),
+    ("fleet_anomaly", "Framework: anomaly-monitor tick overhead + "
+     "detection quality over the scenario bank"),
 ]
 
 

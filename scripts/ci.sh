@@ -1,8 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 CI: docs gate (README/ARCHITECTURE present, public-surface doctests,
 # quickstart's sharded stanza), install test extras, run the streaming +
-# fleet + sharded-fleet + transport + windowed vetting differential suites
-# explicitly
+# fleet + sharded-fleet + transport + windowed vetting + anomaly-monitor
+# differential suites explicitly
 # (with JUnit XML reports), then the full pytest suite, then a fast
 # VetEngine smoke benchmark (batch + windowed + streaming sections: backend
 # agreement, batched-vs-scalar speedup, cached-tick cost,
@@ -99,6 +99,20 @@ if [ "$transport_status" -eq 124 ]; then
   echo "[ci] transport suite timed out (hung worker pool?)"
 fi
 
+# Anomaly monitoring: the live change-point monitor against the anomaly
+# scenario bank (onset localization within +/-2 ticks on every backend,
+# sharded/transport flag plumbing, checkpoint/resume), plus the change-point
+# edge-case regressions (short-input guards, f64 index-sum precision) and
+# the hypothesis property suite (skips offline).
+echo "[ci] anomaly monitor: detection differential + change-point edge suites"
+anomaly_status=0
+python -m pytest -q -x \
+  --junitxml="$REPORTS_DIR/anomaly.xml" \
+  tests/test_fleet_anomaly.py \
+  tests/test_changepoint_edges.py \
+  tests/test_changepoint_properties.py \
+  || anomaly_status=$?
+
 # Windowed vetting next (same reasoning for the batched sliding/ragged path).
 echo "[ci] windowed vetting: differential + property + benchmark-smoke suites"
 windowed_status=0
@@ -135,6 +149,9 @@ python -m pytest -q \
   --ignore=tests/test_fleet_shard_smoke.py \
   --ignore=tests/test_fleet_scenarios.py \
   --ignore=tests/test_fleet_transport.py \
+  --ignore=tests/test_fleet_anomaly.py \
+  --ignore=tests/test_changepoint_edges.py \
+  --ignore=tests/test_changepoint_properties.py \
   --ignore=tests/test_vet_windows.py \
   --ignore=tests/test_vet_windows_properties.py \
   --ignore=tests/test_benchmarks_smoke.py \
@@ -161,6 +178,10 @@ fi
 if [ "$transport_status" -ne 0 ]; then
   echo "[ci] FAIL: transport suites exited $transport_status"
   exit "$transport_status"
+fi
+if [ "$anomaly_status" -ne 0 ]; then
+  echo "[ci] FAIL: anomaly-monitor suites exited $anomaly_status"
+  exit "$anomaly_status"
 fi
 if [ "$windowed_status" -ne 0 ]; then
   echo "[ci] FAIL: windowed vetting suites exited $windowed_status"

@@ -25,8 +25,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["two_segment_sse", "estimate_changepoint", "segment_sse_terms"]
+__all__ = ["index_closed_forms", "two_segment_sse", "estimate_changepoint",
+           "segment_sse_terms"]
 
 
 def _promote(y: jax.Array) -> jax.Array:
@@ -47,36 +49,73 @@ def segment_sse_terms(n1, sx, sy, sxx, sxy, syy):
     return jnp.maximum(sse, 0.0)
 
 
+def index_closed_forms(n: int):
+    """Closed-form index sums Sx(k), Sxx(k), and their segment-2 complements,
+    computed in float64 (``n`` is static, so these are trace-time constants).
+
+    ``k*(k+1)*(2k+1)/6`` exceeds the f32 mantissa for n of a few thousand;
+    evaluating the polynomial *in* f32 compounds the rounding at every
+    multiply and skews the SSE landscape (and hence the chosen cut) on long
+    inputs.  Evaluating in f64 and rounding once at the combine keeps every
+    entry correctly rounded in the working dtype.  Both the jnp scan below
+    and the Pallas kernel (``repro.kernels.changepoint``) consume exactly
+    these arrays, so the two SSE landscapes stay in ulp-level agreement.
+
+    Returns four float64 numpy arrays of shape (n,): ``sx1``, ``sxx1``,
+    ``sx2``, ``sxx2`` (prefix sums over ranks 1..k and their suffix
+    complements over k+1..n).
+    """
+    k = np.arange(1, n + 1, dtype=np.float64)
+    sx1 = k * (k + 1.0) / 2.0
+    sxx1 = k * (k + 1.0) * (2.0 * k + 1.0) / 6.0
+    nf = float(n)
+    sx_tot = nf * (nf + 1.0) / 2.0
+    sxx_tot = nf * (nf + 1.0) * (2.0 * nf + 1.0) / 6.0
+    return sx1, sxx1, sx_tot - sx1, sxx_tot - sxx1
+
+
 def two_segment_sse(y_sorted: jax.Array, omega: int = 3) -> jax.Array:
     """Total SSE for every candidate split k (1-indexed count of the prefix).
 
     Returns an array ``sse`` of shape (n,) where ``sse[k-1]`` is the two-segment
     SSE for the split {Y_1..Y_k | Y_{k+1}..Y_n}.  Entries outside the probing
-    window ``omega <= k <= n - omega`` are +inf.
+    window ``omega <= k <= n - omega`` are +inf (for ``n < 2*omega`` every
+    entry is: there is no valid split).
     """
     y = _promote(y_sorted)
     n = y.shape[0]
     dt = y.dtype
     idx = jnp.arange(1, n + 1, dtype=dt)
 
+    # Center y before the prefix sums.  The two-segment SSE is exactly
+    # invariant to y -> y + c (the intercept absorbs the shift), but the
+    # uncentered f32 cumsums are not: their rounding scales with the offset,
+    # and on near-flat landscapes that noise alone can move the argmin
+    # (e.g. scaling times by c shifts the log curve by log c and used to
+    # flip the cut).  The pivot is the midpoint *element* rather than the
+    # mean: an element pick carries no reduction rounding, so every
+    # implementation of this scan (here, the Pallas wrapper, the fused
+    # window-vet kernel with its padded rows) subtracts the bitwise-same
+    # value and the landscapes stay in ulp agreement.
+    y = y - y[(n - 1) // 2]
+
     cy = jnp.cumsum(y)
     cyy = jnp.cumsum(y * y)
     cxy = jnp.cumsum(idx * y)
 
     k = idx  # candidate prefix length, as float
-    # Closed-form sums of x and x^2 over 1..k and totals over 1..n.
-    sx1 = k * (k + 1.0) / 2.0
-    sxx1 = k * (k + 1.0) * (2.0 * k + 1.0) / 6.0
+    # Closed-form sums of x and x^2: f64 at trace time, cast at combine.
+    sx1_64, sxx1_64, sx2_64, sxx2_64 = index_closed_forms(n)
+    sx1 = jnp.asarray(sx1_64, dt)
+    sxx1 = jnp.asarray(sxx1_64, dt)
+    sx2 = jnp.asarray(sx2_64, dt)
+    sxx2 = jnp.asarray(sxx2_64, dt)
     nf = jnp.asarray(float(n), dt)
-    sx_tot = nf * (nf + 1.0) / 2.0
-    sxx_tot = nf * (nf + 1.0) * (2.0 * nf + 1.0) / 6.0
 
     sy1, syy1, sxy1 = cy, cyy, cxy
     sse1 = segment_sse_terms(k, sx1, sy1, sxx1, sxy1, syy1)
 
     n2 = nf - k
-    sx2 = sx_tot - sx1
-    sxx2 = sxx_tot - sxx1
     sy2 = cy[-1] - cy
     syy2 = cyy[-1] - cyy
     sxy2 = cxy[-1] - cxy
@@ -93,14 +132,29 @@ def estimate_changepoint(y_sorted: jax.Array, omega: int = 3) -> jax.Array:
 
     ``y_sorted`` must be ascending.  Returns an int32 scalar in
     [omega, n - omega].  Jit-safe (dynamic value, static shapes).
+
+    Raises:
+        ValueError: ``n < 2*omega`` — every split is outside the probing
+            window (``two_segment_sse`` is all +inf), so there is no
+            change-point to estimate.  The shape is static, so this raises
+            at trace time even under jit; the naive oracle signals the same
+            condition by returning ``-1``.
     """
+    n = jnp.shape(y_sorted)[0]
+    if n < 2 * omega:
+        raise ValueError(
+            f"estimate_changepoint needs n >= 2*omega points to probe a "
+            f"split (omega={omega} on each side), got n={n}")
     sse = two_segment_sse(y_sorted, omega=omega)
     return (jnp.argmin(sse) + 1).astype(jnp.int32)
 
 
 def estimate_changepoint_naive(y_sorted, omega: int = 3) -> int:
-    """O(n^2) literal transcription of the paper's estimator (test oracle)."""
-    import numpy as np
+    """O(n^2) literal transcription of the paper's estimator (test oracle).
+
+    Returns ``-1`` when no valid split exists (``n < 2*omega``) — the same
+    condition ``estimate_changepoint`` raises ``ValueError`` for.
+    """
 
     y = np.asarray(y_sorted, dtype=np.float64)
     n = y.shape[0]

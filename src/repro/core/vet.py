@@ -99,8 +99,17 @@ def _cut_and_slope(y: jax.Array, omega: int, buckets, cut_space: str,
         per = 1
         curve = y
     z = jnp.log(jnp.maximum(curve, _TINY)) if cut_space == "log" else curve
-    cp = estimate_changepoint if changepoint_fn is None else changepoint_fn
-    tb = cp(z, omega=omega)  # 1-indexed on the curve
+    if curve.shape[0] < 2 * omega:
+        # Degenerate profile, shorter than the probing span: no valid split
+        # exists and ``estimate_changepoint`` refuses to pick one.  The
+        # pipeline's historical fallback is t=1 (the argmin of the all-inf
+        # landscape) — everything past the first record is treated as
+        # extrapolated — which the fused window-vet kernel reproduces for
+        # its padded degenerate rows.
+        tb = jnp.asarray(1, jnp.int32)
+    else:
+        cp = estimate_changepoint if changepoint_fn is None else changepoint_fn
+        tb = cp(z, omega=omega)  # 1-indexed on the curve
     i = jnp.clip(tb - 1, 1, curve.shape[0] - 1)
     anchor = curve[i]
     slope = jnp.maximum(curve[i] - curve[i - 1], 0.0) / per

@@ -43,6 +43,17 @@ This package is the layer between the streams and the engine:
   per-shard accounting on every tick (``tests/test_fleet_transport.py``
   locks the process driver to the in-process fleet across the scenario
   bank, including kill-mid-tick recovery).
+- ``AnomalyMonitor`` (``repro.fleet.anomaly``) rides every mux tick and
+  runs the change-point scan on each stream's own committed vet series —
+  bounded log-vet ring per stream, level-ratio + consecutive-scan
+  confirmation gates against the heavy tail — raising ``RegimeShift``
+  flags on ``MuxTick``/``ShardTick`` and counting them in
+  ``MuxStats.anomalies`` through single, sharded and transport fleets.
+  The anomaly scenario bank (``ANOMALY_SCENARIOS``, after arXiv:1505.01919)
+  injects contention onset, node degradation, fail+restart, diurnal load
+  and hardware-tier migration with known onsets;
+  ``tests/test_fleet_anomaly.py`` pins ±2-tick localization on every
+  backend.
 
 Routed consumers: ``repro.sched.straggler.VetController`` (one mux across
 all workers — ``decide()`` is one coalesced dispatch set instead of a
@@ -50,8 +61,10 @@ per-worker loop) and ``repro.launch.serve`` (dashboard window snapshots
 ticked through a mux inside the decode loop).
 """
 
+from .anomaly import AnomalyMonitor, RegimeShift
 from .mux import MuxStats, MuxTick, VetMux
 from .scenarios import (
+    ANOMALY_SCENARIOS,
     SCENARIOS,
     FleetEvent,
     FleetScenario,
@@ -76,8 +89,11 @@ from .transport import (
 )
 
 __all__ = [
+    "ANOMALY_SCENARIOS",
     "SCENARIOS",
+    "AnomalyMonitor",
     "EngineSpec",
+    "RegimeShift",
     "FleetEvent",
     "FleetScenario",
     "JobVet",

@@ -42,6 +42,7 @@ import numpy as np
 
 from ..engine import BatchVetResult, VetEngine, VetStream, default_engine
 from ..engine.stream import RingDelta, StreamDelta
+from .anomaly import AnomalyMonitor, RegimeShift, default_monitor
 from .schedule import StreamRequest, TickPlan, plan_tick
 
 __all__ = ["MuxStats", "MuxTick", "VetMux"]
@@ -50,9 +51,11 @@ __all__ = ["MuxStats", "MuxTick", "VetMux"]
 class MuxStats(NamedTuple):
     """Lifetime counters for one mux (``VetMux.stats``).
 
-    The last two fields are transport accounting (``repro.fleet.transport``):
-    an in-process mux never retries or respawns anything, so they default
-    to 0 and only the cross-process driver reports non-zero values.
+    ``retries``/``respawns`` are transport accounting
+    (``repro.fleet.transport``): an in-process mux never retries or
+    respawns anything, so they default to 0 and only the cross-process
+    driver reports non-zero values.  ``anomalies`` counts regime-shift
+    flags raised by the anomaly monitor (0 when monitoring is off).
     """
 
     ticks: int  # mux ticks
@@ -63,6 +66,7 @@ class MuxStats(NamedTuple):
     streams: int  # currently registered streams
     retries: int = 0  # transport round trips re-attempted after a failure
     respawns: int = 0  # shard worker processes restarted after a crash
+    anomalies: int = 0  # regime-shift flags raised (repro.fleet.anomaly)
 
 
 def _flush_loop(tick_fn, max_ticks: int):
@@ -97,7 +101,9 @@ class MuxTick(NamedTuple):
 
     ``results[sid]`` is the stream's retained-window result (same object
     contract as ``VetStream.tick()``: ``None`` until the first window
-    completes, the previous object when nothing changed).
+    completes, the previous object when nothing changed).  ``flags`` holds
+    the regime shifts the anomaly monitor raised *this tick* (empty when
+    monitoring is off or the fleet is steady).
     """
 
     results: Dict[Hashable, Optional[BatchVetResult]]
@@ -107,6 +113,7 @@ class MuxTick(NamedTuple):
     dispatches: int  # engine dispatches this tick (== shape buckets hit)
     rows: int  # window rows committed this tick
     padded_rows: int  # pow2-padding overhead rows this tick
+    flags: Tuple[RegimeShift, ...] = ()  # regime shifts raised this tick
 
     @property
     def vet_job(self) -> float:
@@ -148,13 +155,17 @@ class VetMux:
     ``budget`` caps window rows vetted per tick (``None`` = unbounded);
     ``tenant_weights`` biases the fairness split (default: equal);
     ``urgent_headroom`` is the ring headroom at or below which a stream is
-    served in full regardless of budget (see ``repro.fleet.schedule``).
+    served in full regardless of budget (see ``repro.fleet.schedule``);
+    ``monitor`` is the anomaly monitor — ``True`` (default) builds one
+    matched to the engine backend, ``False``/``None`` disables monitoring,
+    or pass a configured ``repro.fleet.AnomalyMonitor``.
     """
 
     def __init__(self, engine: Optional[VetEngine] = None, *,
                  budget: Optional[int] = None,
                  tenant_weights: Optional[Dict[str, float]] = None,
-                 urgent_headroom: int = 0):
+                 urgent_headroom: int = 0,
+                 monitor=True):
         self.engine = engine if engine is not None else default_engine("jax")
         if budget is not None:
             budget = int(budget)
@@ -163,6 +174,11 @@ class VetMux:
         self.budget = budget
         self.tenant_weights = dict(tenant_weights or {})
         self.urgent_headroom = int(urgent_headroom)
+        if monitor is True:
+            monitor = default_monitor(self.engine.backend)
+        elif not monitor:
+            monitor = None
+        self.monitor: Optional[AnomalyMonitor] = monitor
         self._members: "OrderedDict[Hashable, _Member]" = OrderedDict()
         self._ticks = 0
         self._dispatches = 0
@@ -242,6 +258,8 @@ class VetMux:
             True
         """
         member = self._members.pop(self._require(stream_id))
+        if self.monitor is not None:
+            self.monitor.forget(stream_id)
         return member.stream
 
     def _require(self, stream_id: Hashable) -> Hashable:
@@ -266,7 +284,9 @@ class VetMux:
     def stats(self) -> MuxStats:
         return MuxStats(ticks=self._ticks, dispatches=self._dispatches,
                         rows=self._rows, padded_rows=self._padded_rows,
-                        deferred=self._deferred, streams=len(self._members))
+                        deferred=self._deferred, streams=len(self._members),
+                        anomalies=(self.monitor.raised
+                                   if self.monitor is not None else 0))
 
     # ------------------------------------------------------------- ingest
     def feed(self, stream_id: Hashable, times) -> int:
@@ -399,8 +419,13 @@ class VetMux:
 
         results: Dict[Hashable, Optional[BatchVetResult]] = {}
         deferred: Dict[Hashable, int] = {}
+        flags: List[RegimeShift] = []
         for sid, m in self._members.items():
             results[sid] = m.stream.collect()
+            if self.monitor is not None and results[sid] is not None:
+                flags.extend(self.monitor.observe(
+                    sid, results[sid].vet, first=m.stream.first_retained,
+                    tenant=m.tenant))
             left = m.stream.pending_windows
             if left > 0:
                 deferred[sid] = left
@@ -419,7 +444,7 @@ class VetMux:
         self._deferred += sum(deferred.values())
         return MuxTick(results=results, serviced=serviced, deferred=deferred,
                        urgent=plan.urgent, dispatches=dispatches, rows=rows,
-                       padded_rows=padded)
+                       padded_rows=padded, flags=tuple(flags))
 
     def flush(self, max_ticks: int = 1_000_000) -> MuxTick:
         """Tick until no stream has deferred work (drain the backlog after a
@@ -464,6 +489,8 @@ class VetMux:
                 "rows": self._rows, "padded_rows": self._padded_rows,
                 "deferred": self._deferred,
             },
+            "monitor": (self.monitor.state_dict()
+                        if self.monitor is not None else None),
         }
 
     def load_state_dict(self, state: dict) -> None:
@@ -488,3 +515,10 @@ class VetMux:
         self._rows = c["rows"]
         self._padded_rows = c["padded_rows"]
         self._deferred = c["deferred"]
+        # Monitor state rides along so restored muxes neither re-flag old
+        # shifts nor lose the anomaly count (``stats`` equality after a
+        # round trip).  Snapshots predating the monitor restore to a fresh
+        # one.
+        mon = state.get("monitor")
+        if mon is not None and self.monitor is not None:
+            self.monitor.load_state_dict(mon)

@@ -22,6 +22,28 @@ The bank (``SCENARIOS``):
 - ``churn``              — workers join mid-run and leave before the end;
   registration order, results and dispatch counts must stay deterministic.
 
+The anomaly bank models the failure classes of "Characterization of
+Performance Anomalies in Hadoop" (arXiv:1505.01919) by shaping the
+simulator's *reducible-overhead channel* with a per-record multiplier
+envelope — ideal times stay untouched, so the injected shift is exactly the
+kind of regime change the vet measure is built to see.  Each carries its
+injected ``onset_tick`` and ``affected`` stream set as ground truth for the
+anomaly monitor's differential suites (windows are non-overlapping —
+``window == stride == chunk`` — so window index == tick index):
+
+- ``contention_onset``   — the whole fleet's overhead channel steps up at
+  the onset (a co-tenant job lands on every node).
+- ``degraded_node``      — only a slice of the fleet degrades; the rest must
+  stay unflagged.
+- ``fail_restart``       — overhead spikes hard at the onset and recovers
+  after a fixed outage (failure + restart); the monitor should localize the
+  failure edge first.
+- ``diurnal``            — a smooth raised-cosine swell centered on the
+  onset (daily load swing), testing localization without a sharp edge.
+- ``hetero_tiers``       — statically slow/fast hardware tiers (constant
+  overhead level: a *negative control* that must never flag) plus a
+  migrated group whose level shifts at the onset.
+
 All randomness flows from ``numpy.random.default_rng(seed)`` / the
 simulator's seeded draws, so every scenario is bitwise reproducible.
 """
@@ -35,8 +57,8 @@ import numpy as np
 
 from ..profiling import simulate_records
 
-__all__ = ["FleetEvent", "FleetScenario", "SCENARIOS", "StreamSpec",
-           "build", "play"]
+__all__ = ["ANOMALY_SCENARIOS", "FleetEvent", "FleetScenario", "SCENARIOS",
+           "StreamSpec", "build", "play"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,11 +89,21 @@ class FleetEvent:
 
 @dataclasses.dataclass(frozen=True)
 class FleetScenario:
-    """A named fleet shape + its per-tick event script."""
+    """A named fleet shape + its per-tick event script.
+
+    Anomaly-bank scenarios also carry their injected ground truth:
+    ``onset_tick`` is the first tick whose records are drawn from the
+    anomalous regime (``None`` for scenarios with no injected shift), and
+    ``affected`` names the streams the shift touches — the differential
+    suites require the anomaly monitor to localize the onset on exactly
+    those streams and stay quiet on the rest.
+    """
 
     name: str
     specs: Tuple[StreamSpec, ...]
     events: Tuple[FleetEvent, ...]
+    onset_tick: int | None = None
+    affected: Tuple[str, ...] = ()
 
     @property
     def n_streams(self) -> int:
@@ -222,18 +254,196 @@ def churn(*, n_workers: int = 8, n_ticks: int = 8, window: int = 32,
              for i in range(n_base + n_join)}
     events = []
     for k in range(n_ticks):
-        live = [s.stream_id for s in specs
-                if not (k > leave_tick and s.stream_id in leavers)]
+        chunks = {
+            s.stream_id: times[s.stream_id][k * chunk:(k + 1) * chunk]
+            for s in specs
+            if not (k > leave_tick and s.stream_id in leavers)}
         if k >= join_tick:
-            live += [s.stream_id for s in joiners]
+            # A joiner's life starts at join_tick: index its simulated run
+            # by ticks-since-join so its first fed chunk is its first
+            # simulated records.  (Indexing by the global tick silently
+            # dropped each joiner's first join_tick*chunk records.)
+            j = k - join_tick
+            for s in joiners:
+                chunks[s.stream_id] = \
+                    times[s.stream_id][j * chunk:(j + 1) * chunk]
         events.append(FleetEvent(
-            chunks={sid: times[sid][k * chunk:(k + 1) * chunk]
-                    for sid in live},
+            chunks=chunks,
             joins=joiners if k == join_tick else (),
             leaves=leavers if k == leave_tick else (),
         ))
     return FleetScenario("churn", specs, tuple(events))
 
+
+# ------------------------------------------------------- anomaly bank
+def _enveloped_times(n: int, seed: int, worker: int,
+                     envelope: np.ndarray) -> np.ndarray:
+    """One worker's run with the reducible-overhead channel shaped by a
+    per-record multiplier envelope: ``ideal + overhead * m``.  ``m == 1``
+    reproduces the simulator draw bitwise (at this scale); only the overhead
+    channel moves, so the injected anomaly is pure reducible overhead
+    (constant true EI).
+
+    The anomaly bank draws its *baseline* overhead calmer than the default
+    simulator (alpha=2.0 instead of 1.3, so the tail has finite variance,
+    at scale 2e-3): per-window vets under the default alpha=1.3 tail swing
+    1.2x-14x with no anomaly at all, which no onset detector should be
+    asked to see through.  The injected multiplier envelopes then carry
+    the entire anomaly signal."""
+    prof = _anomaly_profile(n, seed, worker)
+    return prof.ideal + prof.overhead * envelope
+
+
+def _anomaly_profile(n: int, seed: int, worker: int):
+    return simulate_records(n, seed=seed * 1000 + worker,
+                            overhead_scale=2e-3, pareto_alpha=2.0)
+
+
+def _per_tick_envelope(mt: np.ndarray, chunk: int) -> np.ndarray:
+    """Expand a per-tick multiplier series to per-record (chunk records/tick)."""
+    return np.repeat(np.asarray(mt, np.float64), chunk)
+
+
+def _anomaly_fleet(n_workers: int, window: int,
+                   tenant=None) -> Tuple[StreamSpec, ...]:
+    """Non-overlapping-window fleet: window == stride, so one window
+    completes per tick and window index == tick index."""
+    return tuple(
+        StreamSpec(_sid(i), window, window, 4 * window,
+                   tenant=tenant(i) if tenant else "default")
+        for i in range(n_workers))
+
+
+def _chunk_events(times: Mapping[str, np.ndarray], n_ticks: int,
+                  chunk: int) -> Tuple[FleetEvent, ...]:
+    return tuple(
+        FleetEvent(chunks={sid: t[k * chunk:(k + 1) * chunk]
+                           for sid, t in times.items()})
+        for k in range(n_ticks))
+
+
+def contention_onset(*, n_workers: int = 8, n_ticks: int = 16,
+                     window: int = 64, boost: float = 16.0,
+                     seed: int = 0) -> FleetScenario:
+    """Fleet-wide contention lands at the onset: every worker's overhead
+    channel steps up by ``boost`` (1505.01919's co-located-job signature)."""
+    onset = n_ticks // 2
+    specs = _anomaly_fleet(n_workers, window)
+    m = _per_tick_envelope(
+        np.where(np.arange(n_ticks) >= onset, boost, 1.0), window)
+    times = {s.stream_id: _enveloped_times(n_ticks * window, seed, i, m)
+             for i, s in enumerate(specs)}
+    return FleetScenario("contention_onset", specs,
+                         _chunk_events(times, n_ticks, window),
+                         onset_tick=onset,
+                         affected=tuple(s.stream_id for s in specs))
+
+
+def degraded_node(*, n_workers: int = 8, n_ticks: int = 16, window: int = 64,
+                  degraded_frac: float = 0.25, boost: float = 16.0,
+                  seed: int = 0) -> FleetScenario:
+    """A slice of the fleet degrades at the onset (partial-node fault:
+    failing disk, hot VM neighbour); the rest must stay unflagged."""
+    onset = n_ticks // 2
+    n_deg = max(1, int(n_workers * degraded_frac))
+    specs = _anomaly_fleet(n_workers, window)
+    step = _per_tick_envelope(
+        np.where(np.arange(n_ticks) >= onset, boost, 1.0), window)
+    flat = np.ones(n_ticks * window)
+    times = {s.stream_id: _enveloped_times(
+        n_ticks * window, seed, i, step if i < n_deg else flat)
+        for i, s in enumerate(specs)}
+    return FleetScenario("degraded_node", specs,
+                         _chunk_events(times, n_ticks, window),
+                         onset_tick=onset,
+                         affected=tuple(s.stream_id
+                                        for s in specs[:n_deg]))
+
+
+def fail_restart(*, n_workers: int = 8, n_ticks: int = 16, window: int = 64,
+                 outage_ticks: int = 5, boost: float = 20.0,
+                 seed: int = 0) -> FleetScenario:
+    """Hard failure at the onset, restart ``outage_ticks`` later: overhead
+    spikes then recovers.  Ground truth is the *failure* edge — the monitor
+    sees only normal+outage windows when it first fires, so its first flag
+    should localize the onset, not the restart."""
+    onset = max(2, n_ticks // 2 - 1)
+    k = np.arange(n_ticks)
+    m = _per_tick_envelope(
+        np.where((k >= onset) & (k < onset + outage_ticks), boost, 1.0),
+        window)
+    specs = _anomaly_fleet(n_workers, window)
+    times = {s.stream_id: _enveloped_times(n_ticks * window, seed, i, m)
+             for i, s in enumerate(specs)}
+    return FleetScenario("fail_restart", specs,
+                         _chunk_events(times, n_ticks, window),
+                         onset_tick=onset,
+                         affected=tuple(s.stream_id for s in specs))
+
+
+def diurnal(*, n_workers: int = 8, n_ticks: int = 16, window: int = 64,
+            amplitude: float = 24.0, ramp_ticks: int = 2,
+            seed: int = 0) -> FleetScenario:
+    """Smooth daily-swing swell: a raised-cosine ramp of the overhead
+    channel centered on the onset (no sharp edge to latch onto)."""
+    onset = n_ticks // 2
+    k = np.arange(n_ticks, dtype=np.float64)
+    phase = np.clip((k - (onset - ramp_ticks / 2.0)) / ramp_ticks, 0.0, 1.0)
+    m = _per_tick_envelope(1.0 + amplitude * 0.5 * (1.0 - np.cos(np.pi * phase)),
+                           window)
+    specs = _anomaly_fleet(n_workers, window)
+    times = {s.stream_id: _enveloped_times(n_ticks * window, seed, i, m)
+             for i, s in enumerate(specs)}
+    return FleetScenario("diurnal", specs,
+                         _chunk_events(times, n_ticks, window),
+                         onset_tick=onset,
+                         affected=tuple(s.stream_id for s in specs))
+
+
+def hetero_tiers(*, n_workers: int = 9, n_ticks: int = 16, window: int = 64,
+                 tiers: Tuple[float, ...] = (1.0, 4.0, 16.0),
+                 boost: float = 16.0, seed: int = 0) -> FleetScenario:
+    """Statically heterogeneous hardware tiers plus a migrated group.
+
+    Two-thirds of the fleet runs on fixed hardware tiers that scale the
+    *whole* runtime — ideal work and overhead alike — by a constant
+    factor.  The vet measure is invariant to that scaling (slow hardware
+    is not suboptimal: EI and OC grow together), so these streams are the
+    negative control the monitor must never flag, no matter how slow
+    their tier.  The last third gets migrated onto an oversubscribed node
+    at the onset: only their reducible-overhead channel jumps (by
+    ``boost``), and only those streams should flag."""
+    onset = n_ticks // 2
+    n_static = 2 * n_workers // 3
+    specs = _anomaly_fleet(
+        n_workers, window,
+        tenant=lambda i: (f"tier{i % len(tiers)}" if i < n_static
+                          else "migrated"))
+    migrate = _per_tick_envelope(
+        np.where(np.arange(n_ticks) >= onset, boost, 1.0), window)
+    times = {}
+    for i, s in enumerate(specs):
+        if i < n_static:
+            prof = _anomaly_profile(n_ticks * window, seed, i)
+            times[s.stream_id] = (tiers[i % len(tiers)]
+                                  * (prof.ideal + prof.overhead))
+        else:
+            times[s.stream_id] = _enveloped_times(n_ticks * window, seed, i,
+                                                  migrate)
+    return FleetScenario("hetero_tiers", specs,
+                         _chunk_events(times, n_ticks, window),
+                         onset_tick=onset,
+                         affected=tuple(s.stream_id
+                                        for s in specs[n_static:]))
+
+
+ANOMALY_SCENARIOS: Dict[str, Callable[..., FleetScenario]] = {
+    "contention_onset": contention_onset,
+    "degraded_node": degraded_node,
+    "fail_restart": fail_restart,
+    "diurnal": diurnal,
+    "hetero_tiers": hetero_tiers,
+}
 
 SCENARIOS: Dict[str, Callable[..., FleetScenario]] = {
     "uniform": uniform,
@@ -241,6 +451,7 @@ SCENARIOS: Dict[str, Callable[..., FleetScenario]] = {
     "bursty": bursty,
     "mixed_windows": mixed_windows,
     "churn": churn,
+    **ANOMALY_SCENARIOS,
 }
 
 

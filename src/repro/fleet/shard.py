@@ -61,6 +61,7 @@ from typing import (
 import numpy as np
 
 from ..engine import VetEngine, VetStream
+from .anomaly import RegimeShift
 from .mux import BatchVetResult, MuxStats, MuxTick, VetMux, _flush_loop
 from .schedule import split_budget
 
@@ -180,6 +181,7 @@ class ShardTick(NamedTuple):
     shards: Tuple[MuxTick, ...]  # per-shard ticks, in shard order
     budgets: Tuple[Optional[int], ...]  # per-shard water-filled budgets
     accounts: tuple = ()  # per-shard ShardAccount, transport driver only
+    flags: Tuple[RegimeShift, ...] = ()  # regime shifts raised, shard order
 
     @property
     def job(self) -> JobVet:
@@ -502,7 +504,8 @@ class ShardedVetMux:
                         rows=sum(s.rows for s in per),
                         padded_rows=sum(s.padded_rows for s in per),
                         deferred=sum(s.deferred for s in per),
-                        streams=len(self._placed))
+                        streams=len(self._placed),
+                        anomalies=sum(s.anomalies for s in per))
 
     @property
     def shard_stats(self) -> Tuple[MuxStats, ...]:
@@ -563,7 +566,8 @@ class ShardedVetMux:
             dispatches=sum(t.dispatches for t in ticks),
             rows=sum(t.rows for t in ticks),
             padded_rows=sum(t.padded_rows for t in ticks),
-            shards=tuple(ticks), budgets=budgets)
+            shards=tuple(ticks), budgets=budgets,
+            flags=tuple(f for t in ticks for f in t.flags))
 
     def flush(self, max_ticks: int = 1_000_000) -> ShardTick:
         """Tick until no shard has deferred work; returns the last tick.

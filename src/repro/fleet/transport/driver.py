@@ -632,7 +632,8 @@ class TransportVetMux:
             dispatches=sum(t.dispatches for t in ticks),
             rows=sum(t.rows for t in ticks),
             padded_rows=sum(t.padded_rows for t in ticks),
-            shards=tuple(ticks), budgets=budgets, accounts=self.accounts)
+            shards=tuple(ticks), budgets=budgets, accounts=self.accounts,
+            flags=tuple(f for t in ticks for f in t.flags))
 
     @staticmethod
     def _as_mux_tick(reply: TickReply) -> MuxTick:
@@ -647,7 +648,8 @@ class TransportVetMux:
         return MuxTick(results=results, serviced=reply.serviced,
                        deferred=reply.deferred, urgent=reply.urgent,
                        dispatches=reply.dispatches, rows=reply.rows,
-                       padded_rows=reply.padded_rows)
+                       padded_rows=reply.padded_rows,
+                       flags=tuple(reply.flags))
 
     def _checkpoint_due(self) -> None:
         for h in self._handles:
@@ -677,7 +679,8 @@ class TransportVetMux:
                         deferred=sum(s.deferred for s in per),
                         streams=len(self._placer.placed),
                         retries=sum(h.retries for h in self._handles),
-                        respawns=sum(h.respawns for h in self._handles))
+                        respawns=sum(h.respawns for h in self._handles),
+                        anomalies=sum(s.anomalies for s in per))
 
     @property
     def shard_stats(self) -> Tuple[MuxStats, ...]:

@@ -121,6 +121,11 @@ class TickReply(NamedTuple):
     dispatches: int
     rows: int
     padded_rows: int
+    # Regime-shift flags the worker-side anomaly monitor raised this tick
+    # (repro.fleet.anomaly.RegimeShift is a top-level NamedTuple, so the
+    # tuple pickles over the pipe as-is).  Appended with a default so a
+    # checkpoint journal recorded before this field replays cleanly.
+    flags: tuple = ()
 
 
 class ShardAccount(NamedTuple):

@@ -71,7 +71,7 @@ class ShardWorker:
         return TickReply(newest=newest, serviced=dict(t.serviced),
                          deferred=dict(t.deferred), urgent=tuple(t.urgent),
                          dispatches=t.dispatches, rows=t.rows,
-                         padded_rows=t.padded_rows)
+                         padded_rows=t.padded_rows, flags=t.flags)
 
     def _op_collect(self, sid: Hashable):
         # Full retained rows for one stream (BatchVetResult or None) — the

@@ -3,15 +3,23 @@
 For n profiled records the two-segment LSE must evaluate SSE(k) at every
 candidate split k — the paper writes this as an O(n^2) regression loop; the
 prefix-sum formulation makes each SSE O(1).  The kernel evaluates a block of
-candidates per grid step from three prefix-sum arrays resident in VMEM:
+candidates per grid step from the prefix-sum arrays resident in VMEM:
 
   grid  = (n // BLOCK,)
-  in    : cy, cyy, cxy blocks (BLOCK,) VMEM; totals (3,) replicated
+  in    : cy, cyy, cxy blocks (BLOCK,) VMEM; sx1, sxx1, sx2, sxx2 blocks
+          (BLOCK,) VMEM (precomputed index closed forms); totals (3,)
+          replicated
   out   : sse block (BLOCK,)
 
-Closed forms: Sx(k) = k(k+1)/2, Sxx(k) = k(k+1)(2k+1)/6 — no extra arrays.
-All math f32, on the same uncentered prefix sums the jnp reference scan uses
-(see ops.py for why reference-consistency beats absolute conditioning here).
+Closed forms Sx(k) = k(k+1)/2, Sxx(k) = k(k+1)(2k+1)/6 and their segment-2
+complements arrive precomputed (f64 on the host, rounded once to f32 —
+``core.changepoint.index_closed_forms``): evaluating the cubic in f32
+inside the kernel compounds rounding beyond the f32 mantissa for n of a
+few thousand, and — the contract that actually matters — would diverge
+from the jnp reference scan, which consumes the same precomputed arrays.
+All remaining math f32, on the same uncentered prefix sums the reference
+uses (see ops.py for why reference-consistency beats absolute
+conditioning here).
 """
 
 from __future__ import annotations
@@ -39,8 +47,8 @@ def _seg_sse(n1, sx, sy, sxx, sxy, syy):
     return jnp.maximum(sse, 0.0)
 
 
-def _kernel(cy_ref, cyy_ref, cxy_ref, tot_ref, sse_ref, *, block: int, n: int,
-            omega: int):
+def _kernel(cy_ref, cyy_ref, cxy_ref, sx1_ref, sxx1_ref, sx2_ref, sxx2_ref,
+            tot_ref, sse_ref, *, block: int, n: int, omega: int):
     pid = pl.program_id(0)
     base = (pid * block).astype(jnp.float32)
     k = base + jax.lax.broadcasted_iota(jnp.float32, (block,), 0) + 1.0
@@ -48,20 +56,18 @@ def _kernel(cy_ref, cyy_ref, cxy_ref, tot_ref, sse_ref, *, block: int, n: int,
     cy = cy_ref[...]
     cyy = cyy_ref[...]
     cxy = cxy_ref[...]
+    sx1 = sx1_ref[...]
+    sxx1 = sxx1_ref[...]
+    sx2 = sx2_ref[...]
+    sxx2 = sxx2_ref[...]
     tot_y = tot_ref[0]
     tot_yy = tot_ref[1]
     tot_xy = tot_ref[2]
 
     nf = jnp.float32(n)
-    sx1 = k * (k + 1.0) * 0.5
-    sxx1 = k * (k + 1.0) * (2.0 * k + 1.0) / 6.0
-    sx_tot = nf * (nf + 1.0) * 0.5
-    sxx_tot = nf * (nf + 1.0) * (2.0 * nf + 1.0) / 6.0
-
     sse1 = _seg_sse(k, sx1, cy, sxx1, cxy, cyy)
     n2 = nf - k
-    sse2 = _seg_sse(n2, sx_tot - sx1, tot_y - cy, sxx_tot - sxx1,
-                    tot_xy - cxy, tot_yy - cyy)
+    sse2 = _seg_sse(n2, sx2, tot_y - cy, sxx2, tot_xy - cxy, tot_yy - cyy)
 
     total = sse1 + sse2
     valid = (k >= jnp.float32(omega)) & (k <= nf - jnp.float32(omega))
@@ -69,11 +75,13 @@ def _kernel(cy_ref, cyy_ref, cxy_ref, tot_ref, sse_ref, *, block: int, n: int,
 
 
 @functools.partial(jax.jit, static_argnames=("true_n", "omega", "block", "interpret"))
-def sse_scan(cy, cyy, cxy, totals, *, true_n: int, omega: int = 3,
-             block: int = DEFAULT_BLOCK, interpret=None):
+def sse_scan(cy, cyy, cxy, sx1, sxx1, sx2, sxx2, totals, *, true_n: int,
+             omega: int = 3, block: int = DEFAULT_BLOCK, interpret=None):
     """SSE for every candidate k from prefix sums (padded to a block multiple).
 
     cy/cyy/cxy: (n_padded,) f32 prefix sums (pad region repeats the totals);
+    sx1/sxx1/sx2/sxx2: (n_padded,) f32 precomputed index closed forms
+    (``core.changepoint.index_closed_forms``, rounded once to f32);
     totals: (3,) f32 = [sum y, sum y^2, sum x*y]; true_n: unpadded length.
     ``interpret=None`` resolves the platform policy (compiled on TPU,
     interpret elsewhere; ``REPRO_PALLAS_INTERPRET`` overrides) at trace
@@ -92,9 +100,13 @@ def sse_scan(cy, cyy, cxy, totals, *, true_n: int, omega: int = 3,
             pl.BlockSpec((block,), lambda i: (i,)),
             pl.BlockSpec((block,), lambda i: (i,)),
             pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
             pl.BlockSpec((3,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
         interpret=interpret,
-    )(cy, cyy, cxy, totals)
+    )(cy, cyy, cxy, sx1, sxx1, sx2, sxx2, totals)

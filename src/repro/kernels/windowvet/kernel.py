@@ -44,14 +44,19 @@ Numerical contracts (the differential ladder leans on these):
   steps add shifted-in zeros — but its rounding differs from the reference
   by a few ulp, so compiled-vs-interpret near-tie flips carry the same
   documented caveat as ``kernels.changepoint``.
-- **Ring prefix sums.**  PR (and the raw-space SSE totals) come from f64
-  prefix sums (and prefix sums of squares) over the arena, computed once on
-  the host and handed in per row — overlapping windows share that work
-  instead of re-reducing their rows, and a window's PR is exact to f32
-  rounding rather than carrying f32 accumulation error across the window.
-- Everything else is f32 on the *uncentered* prefix sums, the same closed
-  forms as ``core.changepoint.two_segment_sse`` — reference-consistency
-  over absolute conditioning, exactly as ``kernels.changepoint`` documents.
+- **Ring prefix sums.**  PR comes from f64 prefix sums over the arena,
+  computed once on the host and handed in per row — overlapping windows
+  share that work instead of re-reducing their rows, and a window's PR is
+  exact to f32 rounding rather than carrying f32 accumulation error across
+  the window.  (The SSE totals are *not* taken from the ring sums: the
+  scan is centered, so its totals are read from the centered cumsum tails,
+  exactly as the reference computes them.)
+- Everything else is f32 on midpoint-element-centered prefix sums — the
+  same centering, same f64-precomputed closed forms as
+  ``core.changepoint.two_segment_sse``.  The pivot is an exact element
+  pick (no reduction rounding), so reference-consistency and absolute
+  conditioning agree here instead of trading off (see
+  ``kernels.changepoint`` for the history of that trade).
 
 TPU caveat: per-row slice starts are read from the VMEM metadata block; a
 production TPU build would prefetch them to SMEM (PrefetchScalarGridSpec).
@@ -148,7 +153,7 @@ def _kernel(arena_ref, starts_ref, lengths_ref, pr_ref, sq_ref, out_ref, *,
     y = jnp.stack(rows)  # (B, lmax) f32
     n = lengths_ref[...]  # (B,) int32
     pr = pr_ref[...]  # (B,) f32: f64 ring prefix-sum window totals
-    sq = sq_ref[...]  # (B,) f32: ... and totals of squares
+    del sq_ref  # totals of squares: unused since the centered scan landed
 
     iota = jax.lax.broadcasted_iota(jnp.int32, (block_rows, lmax), 1)
     mask = iota < n[:, None]
@@ -162,23 +167,25 @@ def _kernel(arena_ref, starts_ref, lengths_ref, pr_ref, sq_ref, out_ref, *,
         z = jnp.log(jnp.maximum(y, _TINY))
     else:
         z = y
-    zm = jnp.where(mask, z, 0.0)
+    # Midpoint-element centering, mirroring core.changepoint.two_segment_sse:
+    # an element pick is exact, so this row subtracts the bitwise-same pivot
+    # the reference scan subtracts and the SSE landscapes stay in ulp
+    # agreement (a mean pivot would round differently over padded rows).
+    pivot = _pick(jnp.where(mask, z, 0.0), (n - 1) // 2)
+    zm = jnp.where(mask, z - pivot[:, None], 0.0)
     kf = (iota + 1).astype(jnp.float32)
 
     cy = _prefix_sum(zm, reference_rounding=reference_rounding)
     cyy = _prefix_sum(zm * zm, reference_rounding=reference_rounding)
     cxy = _prefix_sum(kf * zm, reference_rounding=reference_rounding)
 
+    # Totals read from the centered scans at the row's last valid position —
+    # the same values the reference's cumsum tail yields.  (The host's f64
+    # ring totals pr/sq can't serve the centered scan; pr still feeds the
+    # PR output lane below.)
     last = iota == n[:, None] - 1
-    if log_space:
-        tot_y = jnp.sum(jnp.where(last, cy, 0.0), axis=1)[:, None]
-        tot_yy = jnp.sum(jnp.where(last, cyy, 0.0), axis=1)[:, None]
-    else:
-        # Raw space: z is the window's raw times, so the totals are the ring
-        # prefix-sum (and prefix-sum-of-squares) differences — shared across
-        # overlapping windows, exact to f32 rounding.
-        tot_y = pr[:, None]
-        tot_yy = sq[:, None]
+    tot_y = jnp.sum(jnp.where(last, cy, 0.0), axis=1)[:, None]
+    tot_yy = jnp.sum(jnp.where(last, cyy, 0.0), axis=1)[:, None]
     tot_xy = jnp.sum(jnp.where(last, cxy, 0.0), axis=1)[:, None]
 
     sx1 = kf * (kf + 1.0) * 0.5
@@ -224,7 +231,8 @@ def fused_window_vet_scan(arena, starts, lengths, pr, sq, *, lmax: int,
     arena: (alen,) f32, alen pow2 and >= max(starts) + lmax (no slice clamp);
     starts/lengths: (rows,) int32, rows a multiple of ``block_rows``;
     pr/sq: (rows,) f32 window sums / sums of squares from the host's f64
-    arena prefix sums; lmax: pow2 padded window width.
+    arena prefix sums (``sq`` is kept for call-site stability; the centered
+    SSE scan derives its totals in-kernel); lmax: pow2 padded window width.
     Returns (rows, LANES) f32: [vet, ei, oc, pr, t, n, 0, 0] per row.
     """
     rows = starts.shape[0]

@@ -10,6 +10,12 @@ and ticked *inside* the decode loop — each completed unit-record is appended
 in O(1) and only newly completed windows are ever vetted, through the same
 coalesced dispatch path a multi-worker dashboard uses — instead of
 re-slicing the full profile after the run.
+
+The mux's live anomaly monitor (``repro.fleet.anomaly``) rides every tick:
+a regime shift in the decode stream's window vets — a slow node picked up
+mid-generation, contention onset — is printed the tick it is flagged and
+returned on ``ServeResult.flags``, with the running count in the mux stats
+line.
 """
 
 from __future__ import annotations
@@ -45,6 +51,9 @@ class ServeResult:
     # from the stream ticked during decode (None when the run produced
     # fewer than two full windows).
     windows: Optional[BatchVetResult] = None
+    # Regime-shift flags raised by the mux's live anomaly monitor while the
+    # decode loop ran (``repro.fleet.RegimeShift``; empty on a quiet run).
+    flags: tuple = ()
 
 
 def serve(
@@ -114,7 +123,19 @@ def serve(
                               capacity=4 * _SNAPSHOT_WINDOW,
                               history=_SNAPSHOT_HISTORY)
         fed_units = 0
+        flags = []  # regime-shift flags raised live during decode
         vet_s = 0.0  # estimation overhead, excluded from the throughput wall
+
+        def _tick():
+            # One mux tick; any regime-shift flag the live monitor raises is
+            # printed the tick it fires — that's the dashboard's alert line.
+            for f in mux.tick().flags:
+                flags.append(f)
+                if verbose:
+                    print(f"[serve] REGIME SHIFT {f.stream_id}: window "
+                          f"{f.onset} vet {f.pre:.2f} -> {f.post:.2f} "
+                          f"(confidence {f.confidence:.2f})")
+
         out = [tok]
         for i in range(gen_len - 1):
             with prof.record():
@@ -129,7 +150,7 @@ def serve(
                 new_units = prof.unit_times(start=fed_units)
                 mux.feed("decode", new_units)
                 fed_units += new_units.size
-                mux.tick()
+                _tick()
                 vet_s += time.perf_counter() - tv
         wall = time.perf_counter() - t0 - vet_s
         gen = np.asarray(jnp.concatenate(out, axis=1))
@@ -147,7 +168,7 @@ def serve(
             if verbose:
                 print(f"[serve] vet={vet:.3f} EI={ei:.4f}s PR={pr:.4f}s")
             mux.feed("decode", times[fed_units:])  # trailing units after loop
-            mux.tick()
+            _tick()
             # Transport ticks only carry newest-window rows; the retained
             # drift history comes from the bulk path either way.
             win = (mux.collect("decode") if transport
@@ -162,7 +183,8 @@ def serve(
                               f"{stream.stats.reused} reused rows")
                     print(f"[serve] window vets: {ws} "
                           f"({detail} over {ms.ticks} mux ticks / "
-                          f"{ms.dispatches} dispatches)")
+                          f"{ms.dispatches} dispatches / "
+                          f"{ms.anomalies} anomalies)")
     finally:
         if transport:
             mux.close()
@@ -170,7 +192,7 @@ def serve(
     if verbose:
         print(f"[serve] {batch}x{gen_len} tokens in {wall:.2f}s = {tps:.1f} tok/s")
     return ServeResult(tokens=gen, vet=vet, ei=ei, pr=pr, tokens_per_s=tps,
-                       windows=windows)
+                       windows=windows, flags=tuple(flags))
 
 
 def main():

@@ -36,6 +36,8 @@ SCHEMAS = {
     "fleet_transport": {"workers", "shards", "steps", "backend",
                         "inprocess_sharded_tick_us", "inprocess_driver",
                         "process_driver", "kill_resume", "oracle"},
+    "fleet_anomaly": {"seed", "backend", "method", "tolerance_ticks",
+                      "scenarios", "overhead_256w"},
     "kernels_bench": {"changepoint", "flash", "ssd", "windowvet",
                       "vet_engine", "vet_engine_windowed",
                       "vet_engine_streaming"},
@@ -332,3 +334,61 @@ def test_fleet_transport_kill_resume_recovers_exactly_once():
     assert kr["dispatches"] == oracle["dispatches"]
     assert kr["rows"] == oracle["rows"]
     assert kr["shard0_checkpoints"] >= 1
+
+
+def fleet_anomaly_payload():
+    path = os.path.join(RESULTS_DIR, "fleet_anomaly.json")
+    if not os.path.exists(path):
+        pytest.skip("fleet_anomaly.json not generated on this machine")
+    return load("fleet_anomaly")
+
+
+ANOMALY_SCENARIO_KEYS = {"onset_tick", "n_affected", "detected",
+                         "false_flags", "mean_onset_err_ticks",
+                         "max_onset_err_ticks", "mean_flag_latency_ticks",
+                         "max_flag_latency_ticks"}
+ANOMALY_OVERHEAD_KEYS = {"workers", "ticks", "monitor_on_tick_us",
+                         "monitor_off_tick_us", "overhead_us",
+                         "overhead_pct"}
+
+
+def test_fleet_anomaly_detection_floor():
+    """The acceptance floor on the committed artifact: every affected
+    stream in every bank scenario is detected, each first flag's onset is
+    within the bank's +/-2-tick tolerance of the injected onset, and no
+    unaffected stream ever flags.  These are exact detector outcomes at
+    the bank's pinned seed, not timings, so the floor cannot flake on a
+    loaded machine."""
+    payload = fleet_anomaly_payload()
+    tol = payload["tolerance_ticks"]
+    assert tol <= 2
+    scenarios = payload["scenarios"]
+    assert set(scenarios) == {"contention_onset", "degraded_node",
+                              "fail_restart", "diurnal", "hetero_tiers"}
+    for name, q in scenarios.items():
+        missing = ANOMALY_SCENARIO_KEYS - set(q)
+        assert not missing, (
+            f"fleet_anomaly.json {name} stale: missing {sorted(missing)} — "
+            f"rerun `python -m benchmarks.run --only fleet_anomaly`")
+        assert q["n_affected"] >= 1, name
+        assert q["detected"] == q["n_affected"], f"{name}: missed streams"
+        assert q["false_flags"] == 0, f"{name}: false flags"
+        assert q["max_onset_err_ticks"] <= tol, name
+        assert q["mean_onset_err_ticks"] <= q["max_onset_err_ticks"], name
+        # Confirmation takes a couple of scans by design; latency is still
+        # bounded (flags arrive while the regime is ongoing, not post-hoc).
+        assert 0 <= q["max_flag_latency_ticks"] <= 8, name
+
+
+def test_fleet_anomaly_overhead_section_finite():
+    """Wall-clock overhead is environment noise and deliberately not
+    pinned; only completeness and basic sanity of the section are."""
+    payload = fleet_anomaly_payload()
+    ov = payload["overhead_256w"]
+    missing = ANOMALY_OVERHEAD_KEYS - set(ov)
+    assert not missing, (
+        f"fleet_anomaly.json overhead stale: missing {sorted(missing)} — "
+        f"rerun `python -m benchmarks.run --only fleet_anomaly`")
+    assert ov["workers"] == 256
+    for key in ("monitor_on_tick_us", "monitor_off_tick_us"):
+        assert math.isfinite(ov[key]) and ov[key] > 0

@@ -1,0 +1,101 @@
+"""Property-based (hypothesis) tests for the change-point scan.
+
+The O(n^2) f64 naive scan is the oracle; properties drive the closed-form
+prefix-sum paths across short, degenerate, tied and heavy-tailed inputs and
+across omega boundaries.  Skipped wholesale when ``hypothesis`` is not
+installed, like the other ``*_properties`` suites.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.changepoint import (  # noqa: E402
+    estimate_changepoint,
+    estimate_changepoint_naive,
+    two_segment_sse,
+)
+
+
+@st.composite
+def sorted_curves(draw):
+    """Sorted profiles spanning flat, tied, stepped and spiky shapes."""
+    n = draw(st.integers(min_value=6, max_value=96))
+    kind = draw(st.sampled_from(["flat", "tied", "step", "spiky"]))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    if kind == "flat":
+        y = np.full(n, draw(st.floats(1e-3, 10.0)))
+    elif kind == "tied":
+        # Few distinct values, long runs of exact ties.
+        vals = np.sort(rng.uniform(0.5, 5.0, size=3))
+        y = np.sort(rng.choice(vals, size=n))
+    elif kind == "step":
+        k = draw(st.integers(1, n - 1))
+        lo = draw(st.floats(0.1, 1.0))
+        hi = lo * draw(st.floats(1.5, 20.0))
+        y = np.concatenate([np.full(k, lo), np.full(n - k, hi)])
+    else:
+        y = np.sort(rng.normal(1.0, 0.05, n) + rng.pareto(1.5, n) * 0.5)
+    return np.sort(y)
+
+
+@settings(max_examples=40, deadline=None)
+@given(sorted_curves(), st.integers(min_value=1, max_value=6))
+def test_prop_matches_naive_oracle_or_raises(y, omega):
+    """Valid inputs: the batch path's split is SSE-equivalent to the
+    oracle's (argmin ties under f32 may pick a different index, but never a
+    worse landscape value).  Invalid inputs: ValueError vs the oracle's -1."""
+    n = y.size
+    if n < 2 * omega:
+        assert estimate_changepoint_naive(y, omega=omega) == -1
+        with pytest.raises(ValueError):
+            estimate_changepoint(jnp.asarray(y, jnp.float32), omega=omega)
+        return
+    t_naive = estimate_changepoint_naive(y, omega=omega)
+    t = int(estimate_changepoint(jnp.asarray(y, jnp.float32), omega=omega))
+    assert omega <= t <= n - omega
+    assert t_naive != -1
+    # Compare landscape values at the two argmins in f64: the batch pick
+    # must be as good as the oracle's up to f32 round-off of the inputs.
+    sse = np.asarray(two_segment_sse(jnp.asarray(y, jnp.float32),
+                                     omega=omega), np.float64)
+    span = max(float(np.ptp(y)) ** 2 * n, 1e-9)
+    assert sse[t - 1] <= sse[t_naive - 1] + 1e-4 * span
+
+
+@settings(max_examples=25, deadline=None)
+@given(sorted_curves())
+def test_prop_omega_widening_never_escapes_window(y):
+    """Every omega yields a split inside its own probing window, and the
+    landscape outside the window is +inf."""
+    n = y.size
+    for omega in range(1, n // 2 + 1):
+        sse = np.asarray(two_segment_sse(jnp.asarray(y, jnp.float32),
+                                         omega=omega))
+        k = np.arange(1, n + 1)
+        outside = (k < omega) | (k > n - omega)
+        assert np.all(np.isinf(sse[outside]))
+        t = int(estimate_changepoint(jnp.asarray(y, jnp.float32),
+                                     omega=omega))
+        assert omega <= t <= n - omega
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=30), st.floats(1.5, 30.0),
+       st.integers(min_value=1, max_value=30))
+def test_prop_clean_step_localized_exactly(k, jump, tail):
+    """A noiseless two-level step is localized exactly by both the oracle
+    and the batch path whenever the step is inside the probing window."""
+    omega = 3
+    n = k + tail
+    if n < 2 * omega or not (omega <= k <= n - omega):
+        return
+    y = np.concatenate([np.ones(k), np.full(tail, jump)])
+    assert estimate_changepoint_naive(y, omega=omega) == k
+    assert int(estimate_changepoint(jnp.asarray(y, jnp.float32),
+                                    omega=omega)) == k

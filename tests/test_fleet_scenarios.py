@@ -63,9 +63,56 @@ class TestScenarioDeterminism:
 
     def test_golden_hash_pins_churn_event_stream(self):
         """churn's join/leave schedule is derived arithmetic on top of the
-        simulator draws; pinned for the same reason as bursty."""
+        simulator draws; pinned for the same reason as bursty.  (Hash bumped
+        when the joiner chunk-indexing bug was fixed: joiners are now fed by
+        ticks-since-join, so their first simulated records are no longer
+        dropped — previous golden 8a6d5670dc24a4b014d9695a995bff85.)"""
         assert scenario_hash(build("churn", seed=0)) == \
-            "8a6d5670dc24a4b014d9695a995bff85"
+            "03f7010598bc9e1f0548846b4f6fb4d2"
+
+    def test_churn_joiners_fed_from_their_first_records(self):
+        """Regression for the joiner chunk-indexing bug: the first chunk a
+        joiner receives must be the *start* of its simulated run, not the
+        global-tick offset into it."""
+        n_ticks = 8
+        sc = build("churn", n_ticks=n_ticks, seed=0)
+        joiners = {s.stream_id for e in sc.events for s in e.joins}
+        assert joiners
+        from repro.fleet.scenarios import _worker_times
+        for sid in joiners:
+            first = next(e.chunks[sid] for e in sc.events if sid in e.chunks)
+            whole = _worker_times(n_ticks * first.size, 0, int(sid[1:]))
+            np.testing.assert_array_equal(first, whole[:first.size])
+
+    ANOMALY_GOLDENS = {
+        "contention_onset": "c7f26f3e75c7d3a096079cd639630339",
+        "degraded_node": "9c36498bfb60abde85a0be5c6566f0b4",
+        "fail_restart": "2f9b2fd5f21cdd24eacb037c492ff94f",
+        "diurnal": "4cb6298f95acec4c47499ec92b273a41",
+        "hetero_tiers": "90c267c357ca7c173d91510a212dcfa3",
+    }
+
+    @pytest.mark.parametrize("name", sorted(ANOMALY_GOLDENS))
+    def test_golden_hash_pins_anomaly_bank(self, name):
+        """The anomaly bank's envelopes are derived arithmetic over the
+        simulator draws; each compiled event stream is pinned so the
+        detection-quality suites measure the detector, not drift in the
+        injected ground truth."""
+        sc = build(name, seed=0)
+        assert scenario_hash(sc) == self.ANOMALY_GOLDENS[name]
+        assert sc.onset_tick is not None and sc.affected
+
+    def test_anomaly_bank_carries_ground_truth(self):
+        """Every anomaly scenario declares its injected onset and affected
+        streams; hetero_tiers' static tiers are the negative control."""
+        from repro.fleet.scenarios import ANOMALY_SCENARIOS
+        for name in ANOMALY_SCENARIOS:
+            sc = build(name, seed=0)
+            assert 0 < sc.onset_tick < len(sc.events)
+            sids = {s.stream_id for s in sc.specs}
+            assert set(sc.affected) <= sids
+        hetero = build("hetero_tiers", seed=0)
+        assert set(hetero.affected) < {s.stream_id for s in hetero.specs}
 
     def test_different_seeds_differ(self):
         assert scenario_hash(build("bursty", seed=0)) != \
