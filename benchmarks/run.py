@@ -31,6 +31,8 @@ SUITES = [
      "in-process fleet, with kill+resume recovery"),
     ("fleet_anomaly", "Framework: anomaly-monitor tick overhead + "
      "detection quality over the scenario bank"),
+    ("fleet_obs", "Framework: tracer overhead gate + cross-process trace "
+     "+ self-applied optimality ledger"),
 ]
 
 

@@ -1,8 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 CI: docs gate (README/ARCHITECTURE present, public-surface doctests,
 # quickstart's sharded stanza), install test extras, run the streaming +
-# fleet + sharded-fleet + transport + windowed vetting + anomaly-monitor
-# differential suites explicitly
+# fleet + sharded-fleet + transport + anomaly-monitor + observability +
+# windowed vetting differential suites explicitly
 # (with JUnit XML reports), then the full pytest suite, then a fast
 # VetEngine smoke benchmark (batch + windowed + streaming sections: backend
 # agreement, batched-vs-scalar speedup, cached-tick cost,
@@ -113,6 +113,33 @@ python -m pytest -q -x \
   tests/test_changepoint_properties.py \
   || anomaly_status=$?
 
+# Observability: tracer/metrics/export/ledger semantics plus the
+# instrumented fleet seam (traced-vs-untraced differential, cross-process
+# span adoption, respawn re-enable), then a live trace-export-and-validate:
+# quickstart stanza 7 dumps a Chrome trace and validate_chrome must pass it.
+echo "[ci] observability: tracer + export + ledger suites, trace validate"
+obs_status=0
+python -m pytest -q -x \
+  --junitxml="$REPORTS_DIR/obs.xml" \
+  tests/test_obs.py \
+  || obs_status=$?
+if [ "$obs_status" -eq 0 ]; then
+  python examples/quickstart.py --stanza 7 \
+    --trace "$REPORTS_DIR/quickstart_trace.json" >/dev/null \
+    || obs_status=$?
+fi
+if [ "$obs_status" -eq 0 ]; then
+  python - "$REPORTS_DIR/quickstart_trace.json" <<'PY' || obs_status=$?
+import json, sys
+from repro.obs import validate_chrome
+problems = validate_chrome(json.load(open(sys.argv[1])))
+if problems:
+    print("[ci] trace validation problems:", *problems, sep="\n  ")
+    sys.exit(1)
+print(f"[ci] quickstart trace validated ({sys.argv[1]})")
+PY
+fi
+
 # Windowed vetting next (same reasoning for the batched sliding/ragged path).
 echo "[ci] windowed vetting: differential + property + benchmark-smoke suites"
 windowed_status=0
@@ -152,6 +179,7 @@ python -m pytest -q \
   --ignore=tests/test_fleet_anomaly.py \
   --ignore=tests/test_changepoint_edges.py \
   --ignore=tests/test_changepoint_properties.py \
+  --ignore=tests/test_obs.py \
   --ignore=tests/test_vet_windows.py \
   --ignore=tests/test_vet_windows_properties.py \
   --ignore=tests/test_benchmarks_smoke.py \
@@ -182,6 +210,10 @@ fi
 if [ "$anomaly_status" -ne 0 ]; then
   echo "[ci] FAIL: anomaly-monitor suites exited $anomaly_status"
   exit "$anomaly_status"
+fi
+if [ "$obs_status" -ne 0 ]; then
+  echo "[ci] FAIL: observability suites / trace validation exited $obs_status"
+  exit "$obs_status"
 fi
 if [ "$windowed_status" -ne 0 ]; then
   echo "[ci] FAIL: windowed vetting suites exited $windowed_status"

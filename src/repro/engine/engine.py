@@ -41,6 +41,7 @@ from ..core.vet import VetResult, vet_pipeline, vet_task
 from ..kernels.changepoint.ops import auto_block, changepoint_pallas
 from ..kernels.runtime import resolve_interpret
 from ..kernels.windowvet.ops import fused_window_vet, staged_bytes
+from ..obs.trace import span as _span
 
 __all__ = [
     "BACKENDS",
@@ -166,6 +167,31 @@ class VetEngine:
         )
         self._cache_hits = 0
         self._cache_misses = 0
+        # Observability seam (repro.obs): every backend dispatch records an
+        # ``engine.dispatch`` span when a tracer is attached; ``None`` is
+        # the no-op fast path.  ``trace_tid`` is the lane spans land on
+        # (shard index when this engine belongs to a sharded fleet).
+        # ``_seen_shapes`` marks first-seen dispatch shapes so the
+        # compile-inclusive ("cold") spans are distinguishable in the
+        # optimality ledger.
+        self.tracer = None
+        self.trace_tid = 0
+        self._seen_shapes: set = set()
+
+    def set_tracer(self, tracer, tid: int = 0) -> None:
+        """Attach (or detach, with ``None``) a ``repro.obs.Tracer``; spans
+        from this engine land on lane ``tid``."""
+        self.tracer = tracer
+        self.trace_tid = int(tid)
+
+    def _dispatch_cold(self, kind: str, shape) -> bool:
+        """First time this engine dispatches ``shape`` on a compiled
+        backend — jit/pallas compilation happens inside that span."""
+        key = (kind, tuple(shape))
+        if key in self._seen_shapes:
+            return False
+        self._seen_shapes.add(key)
+        return self.backend != "numpy"
 
     def __repr__(self) -> str:
         return (f"VetEngine(backend={self.backend!r}, omega={self.omega}, "
@@ -391,20 +417,26 @@ class VetEngine:
     def _vet_batch_impl(self, m: np.ndarray) -> BatchVetResult:
         self.dispatches += 1
         self.dispatch_bytes += m.nbytes
-        if self.backend == "numpy":
-            return self._numpy_batch(m)
-        if self._batch_fn is None:
-            self._batch_fn = self._make_batch_fn()
-        vet, ei, oc, pr, t = self._batch_fn(m)
-        w = m.shape[0]
-        return BatchVetResult(
-            vet=np.asarray(vet, dtype=np.float64),
-            ei=np.asarray(ei, dtype=np.float64),
-            oc=np.asarray(oc, dtype=np.float64),
-            pr=np.asarray(pr, dtype=np.float64),
-            t=np.asarray(t, dtype=np.int32),
-            n=np.full(w, m.shape[1], dtype=np.int64),
-        )
+        with _span(self.tracer, "engine.dispatch", tid=self.trace_tid,
+                   backend=self.backend, kind="batch", rows=int(m.shape[0]),
+                   window=int(m.shape[1]), bytes=int(m.nbytes),
+                   cold=self._dispatch_cold("batch", m.shape)):
+            if self.backend == "numpy":
+                return self._numpy_batch(m)
+            if self._batch_fn is None:
+                self._batch_fn = self._make_batch_fn()
+            vet, ei, oc, pr, t = self._batch_fn(m)
+            # Host conversion stays in-span: jax dispatch is async, the
+            # device sync happens here.
+            w = m.shape[0]
+            return BatchVetResult(
+                vet=np.asarray(vet, dtype=np.float64),
+                ei=np.asarray(ei, dtype=np.float64),
+                oc=np.asarray(oc, dtype=np.float64),
+                pr=np.asarray(pr, dtype=np.float64),
+                t=np.asarray(t, dtype=np.int32),
+                n=np.full(w, m.shape[1], dtype=np.int64),
+            )
 
     # ------------------------------------------------------------ fused path
     def fused_supported(self, max_len: int) -> bool:
@@ -425,12 +457,23 @@ class VetEngine:
         O(arena + rows) bytes (the kernel slices windows out of the arena
         in VMEM — no gather matrix is ever materialized)."""
         self.dispatches += 1
-        self.dispatch_bytes += staged_bytes(arena.size, starts.size,
-                                            int(lengths.max()))
-        vet, ei, oc, pr, t, n = fused_window_vet(
-            arena, starts, lengths, omega=self.omega,
-            cut_space=self.cut_space, interpret=self.interpret)
-        return BatchVetResult(vet=vet, ei=ei, oc=oc, pr=pr, t=t, n=n)
+        max_len = int(lengths.max())
+        nbytes = staged_bytes(arena.size, starts.size, max_len)
+        self.dispatch_bytes += nbytes
+        with _span(self.tracer, "engine.dispatch", tid=self.trace_tid,
+                   backend=self.backend, kind="fused",
+                   rows=int(starts.size), window=max_len, bytes=int(nbytes),
+                   cold=self._dispatch_cold(
+                       # Pow2-rounded: the fused kernel pads its launch
+                       # shapes, so compile cache hits follow the rounded
+                       # sizes, not the raw ones.
+                       "fused", (1 << max(0, arena.size - 1).bit_length(),
+                                 1 << max(0, starts.size - 1).bit_length(),
+                                 1 << max(0, max_len - 1).bit_length()))):
+            vet, ei, oc, pr, t, n = fused_window_vet(
+                arena, starts, lengths, omega=self.omega,
+                cut_space=self.cut_space, interpret=self.interpret)
+            return BatchVetResult(vet=vet, ei=ei, oc=oc, pr=pr, t=t, n=n)
 
     def pad_rows_pow2(self, matrix: np.ndarray):
         """Pad a delta batch to the next power-of-two row count.

@@ -64,6 +64,7 @@ from typing import NamedTuple, Optional
 
 import numpy as np
 
+from ..obs.trace import span as _span
 from .engine import BatchVetResult, VetEngine, default_engine
 
 __all__ = ["RingDelta", "StreamDelta", "StreamStats", "VetStream"]
@@ -417,9 +418,11 @@ class VetStream:
         # of the same stream to hit the engine cache.
         key = ("stream", self.window, self.stride, self._vetted,
                self._vetted + n_new, self._epoch, self._fp.hexdigest())
+        with _span(self.engine.tracer, "stream.drain",
+                   tid=self.engine.trace_tid, windows=n_new):
+            matrix = self._gather(starts)
         return StreamDelta(start=self._vetted, count=n_new,
-                           matrix=self._gather(starts), key=key,
-                           epoch=self._epoch)
+                           matrix=matrix, key=key, epoch=self._epoch)
 
     def drain_ring(self, max_windows: Optional[int] = None) \
             -> Optional[RingDelta]:
@@ -458,7 +461,9 @@ class VetStream:
                 f"are resident; tick() more often or raise capacity "
                 f"({self.capacity})")
         end = (self._vetted + n_new - 1) * self.stride + self.window
-        arena = self._ring[np.arange(base, end) % self.capacity]
+        with _span(self.engine.tracer, "stream.drain",
+                   tid=self.engine.trace_tid, windows=n_new, ring=True):
+            arena = self._ring[np.arange(base, end) % self.capacity]
         starts = np.arange(n_new, dtype=np.int64) * self.stride
         key = ("fusedring", self.window, self.stride, self._vetted,
                self._vetted + n_new, self._epoch, self._fp.hexdigest())
@@ -513,14 +518,16 @@ class VetStream:
                 f"result rows")
         self._reused_rows += self._vetted
         self._vetted_rows += delta.count
-        self._splice(delta.start, rows)
-        self._vetted = delta.start + delta.count
-        if (self.history is not None
-                and self._vetted - self._row_base > self.history):
-            evict_to = self._vetted - self.history
-            self._evicted_rows += evict_to - self._row_base
-            self._row_base = evict_to
-        self._last = None
+        with _span(self.engine.tracer, "stream.commit",
+                   tid=self.engine.trace_tid, windows=delta.count):
+            self._splice(delta.start, rows)
+            self._vetted = delta.start + delta.count
+            if (self.history is not None
+                    and self._vetted - self._row_base > self.history):
+                evict_to = self._vetted - self.history
+                self._evicted_rows += evict_to - self._row_base
+                self._row_base = evict_to
+            self._last = None
 
     def collect(self) -> Optional[BatchVetResult]:
         """Result over the retained vetted windows (frozen views), or ``None``
@@ -533,16 +540,18 @@ class VetStream:
             return None
         if self._last is not None:
             return self._last
-        lo = self._row_base - self._phys_base
-        fields = {}
-        for name in ("vet", "ei", "oc", "pr", "t", "n"):
-            v = self._rows[name][lo:lo + n_rows]
-            v.flags.writeable = False  # restricts the view, not the base
-            fields[name] = v
-        res = BatchVetResult(**fields)
-        self._exposed = max(self._exposed, self._vetted)
-        self._last = res
-        return res
+        with _span(self.engine.tracer, "stream.collect",
+                   tid=self.engine.trace_tid, windows=n_rows):
+            lo = self._row_base - self._phys_base
+            fields = {}
+            for name in ("vet", "ei", "oc", "pr", "t", "n"):
+                v = self._rows[name][lo:lo + n_rows]
+                v.flags.writeable = False  # restricts the view, not the base
+                fields[name] = v
+            res = BatchVetResult(**fields)
+            self._exposed = max(self._exposed, self._vetted)
+            self._last = res
+            return res
 
     def tick(self) -> Optional[BatchVetResult]:
         """Vet the windows that became complete since the last tick.

@@ -42,6 +42,7 @@ import numpy as np
 
 from ..engine import BatchVetResult, VetEngine, VetStream, default_engine
 from ..engine.stream import RingDelta, StreamDelta
+from ..obs.trace import span as _span
 from .anomaly import AnomalyMonitor, RegimeShift, default_monitor
 from .schedule import StreamRequest, TickPlan, plan_tick
 
@@ -165,7 +166,8 @@ class VetMux:
                  budget: Optional[int] = None,
                  tenant_weights: Optional[Dict[str, float]] = None,
                  urgent_headroom: int = 0,
-                 monitor=True):
+                 monitor=True,
+                 tracer=None):
         self.engine = engine if engine is not None else default_engine("jax")
         if budget is not None:
             budget = int(budget)
@@ -179,6 +181,14 @@ class VetMux:
         elif not monitor:
             monitor = None
         self.monitor: Optional[AnomalyMonitor] = monitor
+        # Observability seam (repro.obs).  Only a non-None tracer is wired
+        # through: attaching goes down to the engine, and the (possibly
+        # process-wide default_engine) must not lose a tracer some other
+        # consumer attached just because an untraced mux was built on it.
+        self.tracer = None
+        self.trace_tid = 0
+        if tracer is not None:
+            self.set_tracer(tracer)
         self._members: "OrderedDict[Hashable, _Member]" = OrderedDict()
         self._ticks = 0
         self._dispatches = 0
@@ -190,6 +200,14 @@ class VetMux:
         return (f"VetMux(backend={self.engine.backend!r}, "
                 f"streams={len(self._members)}, budget={self.budget}, "
                 f"ticks={self._ticks})")
+
+    def set_tracer(self, tracer, tid: int = 0) -> None:
+        """Attach (or detach, with ``None``) a ``repro.obs.Tracer``.  Spans
+        from this mux — and from its engine and every stream it drains —
+        land on lane ``tid`` (the shard index in a sharded fleet)."""
+        self.tracer = tracer
+        self.trace_tid = int(tid)
+        self.engine.set_tracer(tracer, tid=tid)
 
     # -------------------------------------------------------- registration
     def register(self, stream_id: Hashable, *, window: Optional[int] = None,
@@ -338,105 +356,140 @@ class VetMux:
             (3, True)
         """
         self._ticks += 1
-        requests = [
-            StreamRequest(stream_id=sid, pending=m.stream.pending_windows,
-                          priority=m.priority, tenant=m.tenant,
-                          staleness=m.staleness,
-                          headroom=m.stream.headroom)
-            for sid, m in self._members.items()
-        ]
-        plan = plan_tick(requests, budget=self.budget,
-                         tenant_weights=self.tenant_weights,
-                         urgent_headroom=self.urgent_headroom)
+        tick_span = _span(self.tracer, "mux.tick", tid=self.trace_tid,
+                          streams=len(self._members))
+        with tick_span:
+            with _span(self.tracer, "mux.plan", tid=self.trace_tid):
+                requests = [
+                    StreamRequest(stream_id=sid,
+                                  pending=m.stream.pending_windows,
+                                  priority=m.priority, tenant=m.tenant,
+                                  staleness=m.staleness,
+                                  headroom=m.stream.headroom)
+                    for sid, m in self._members.items()
+                ]
+                plan = plan_tick(requests, budget=self.budget,
+                                 tenant_weights=self.tenant_weights,
+                                 urgent_headroom=self.urgent_headroom)
 
-        dispatches = rows = padded = 0
-        serviced: Dict[Hashable, int] = {}
+            dispatches = rows = padded = 0
+            serviced: Dict[Hashable, int] = {}
 
-        # Fused path: when the engine's block-sparse kernel covers every
-        # window length planned for service, the whole ragged tick is ONE
-        # launch — the per-length shape buckets below collapse into a
-        # single concatenated arena with a row -> (stream, window) map.
-        fused = bool(plan.serve) and self.engine.fused_supported(
-            max(self._members[sid].stream.window for sid in plan.serve))
-        if fused:
-            ring: List[Tuple[Hashable, RingDelta]] = []
-            for sid, take in plan.serve.items():
-                delta = self._members[sid].stream.drain_ring(max_windows=take)
-                if delta is not None:
-                    ring.append((sid, delta))
-            if ring:
-                offsets = np.cumsum(
-                    [0] + [d.arena.size for _, d in ring[:-1]])
-                arena = np.concatenate([d.arena for _, d in ring])
-                starts = np.concatenate(
-                    [d.starts + off for (_, d), off in zip(ring, offsets)])
-                lengths = np.concatenate(
-                    [np.full(d.count, d.window, dtype=np.int64)
-                     for _, d in ring])
-                key = ("muxfused", tuple(d.key for _, d in ring))
-                res = self.engine._memo(
-                    key, lambda: self.engine._vet_arena_impl(arena, starts,
-                                                             lengths))
+            # Fused path: when the engine's block-sparse kernel covers every
+            # window length planned for service, the whole ragged tick is ONE
+            # launch — the per-length shape buckets below collapse into a
+            # single concatenated arena with a row -> (stream, window) map.
+            fused = bool(plan.serve) and self.engine.fused_supported(
+                max(self._members[sid].stream.window for sid in plan.serve))
+            if fused:
+                with _span(self.tracer, "mux.coalesce", tid=self.trace_tid,
+                           fused=True) as co:
+                    ring: List[Tuple[Hashable, RingDelta]] = []
+                    for sid, take in plan.serve.items():
+                        delta = self._members[sid].stream.drain_ring(
+                            max_windows=take)
+                        if delta is not None:
+                            ring.append((sid, delta))
+                    if ring:
+                        offsets = np.cumsum(
+                            [0] + [d.arena.size for _, d in ring[:-1]])
+                        arena = np.concatenate([d.arena for _, d in ring])
+                        starts = np.concatenate(
+                            [d.starts + off
+                             for (_, d), off in zip(ring, offsets)])
+                        lengths = np.concatenate(
+                            [np.full(d.count, d.window, dtype=np.int64)
+                             for _, d in ring])
+                    co.set(streams=len(ring))
+                if ring:
+                    key = ("muxfused", tuple(d.key for _, d in ring))
+                    with _span(self.tracer, "mux.dispatch",
+                               tid=self.trace_tid, fused=True,
+                               rows=int(starts.size)):
+                        res = self.engine._memo(
+                            key, lambda: self.engine._vet_arena_impl(
+                                arena, starts, lengths))
+                    dispatches += 1
+                    with _span(self.tracer, "mux.commit",
+                               tid=self.trace_tid, streams=len(ring)):
+                        off = 0
+                        for sid, delta in ring:
+                            seg = BatchVetResult(
+                                *(a[off:off + delta.count] for a in res))
+                            self._members[sid].stream.commit(delta, seg)
+                            serviced[sid] = delta.count
+                            off += delta.count
+                            rows += delta.count
+
+            # Drain in plan order, bucket by window length (the matrix column
+            # count) — heterogeneous fleets dispatch once per distinct length.
+            buckets: "OrderedDict[int, List[Tuple[Hashable, StreamDelta]]]" \
+                = OrderedDict()
+            if not fused:
+                with _span(self.tracer, "mux.coalesce", tid=self.trace_tid,
+                           fused=False):
+                    for sid, take in plan.serve.items():
+                        delta = self._members[sid].stream.drain(
+                            max_windows=take)
+                        if delta is not None:
+                            buckets.setdefault(
+                                delta.matrix.shape[1], []).append(
+                                    (sid, delta))
+
+            for wlen, group in buckets.items():
+                big = (group[0][1].matrix if len(group) == 1
+                       else np.concatenate([d.matrix for _, d in group]))
+                # Same pow2 padding contract as VetStream.tick: compiled
+                # batch shapes stay O(log fleet) as deltas fluctuate tick to
+                # tick.
+                big, pad_rows = self.engine.pad_rows_pow2(big)
+                padded += pad_rows
+                key = ("mux", wlen, tuple(d.key for _, d in group))
+                with _span(self.tracer, "mux.dispatch", tid=self.trace_tid,
+                           wlen=int(wlen), rows=int(big.shape[0])):
+                    res = self.engine._memo(
+                        key, lambda big=big: self.engine._vet_batch_impl(big))
                 dispatches += 1
-                off = 0
-                for sid, delta in ring:
-                    seg = BatchVetResult(
-                        *(a[off:off + delta.count] for a in res))
-                    self._members[sid].stream.commit(delta, seg)
-                    serviced[sid] = delta.count
-                    off += delta.count
-                    rows += delta.count
+                with _span(self.tracer, "mux.commit", tid=self.trace_tid,
+                           streams=len(group)):
+                    off = 0
+                    for sid, delta in group:
+                        seg = BatchVetResult(
+                            *(a[off:off + delta.count] for a in res))
+                        self._members[sid].stream.commit(delta, seg)
+                        serviced[sid] = delta.count
+                        off += delta.count
+                        rows += delta.count
 
-        # Drain in plan order, bucket by window length (the matrix column
-        # count) — heterogeneous fleets dispatch once per distinct length.
-        buckets: "OrderedDict[int, List[Tuple[Hashable, StreamDelta]]]" = \
-            OrderedDict()
-        if not fused:
-            for sid, take in plan.serve.items():
-                delta = self._members[sid].stream.drain(max_windows=take)
-                if delta is not None:
-                    buckets.setdefault(delta.matrix.shape[1], []).append(
-                        (sid, delta))
-
-        for wlen, group in buckets.items():
-            big = (group[0][1].matrix if len(group) == 1
-                   else np.concatenate([d.matrix for _, d in group]))
-            # Same pow2 padding contract as VetStream.tick: compiled batch
-            # shapes stay O(log fleet) as deltas fluctuate tick to tick.
-            big, pad_rows = self.engine.pad_rows_pow2(big)
-            padded += pad_rows
-            key = ("mux", wlen, tuple(d.key for _, d in group))
-            res = self.engine._memo(
-                key, lambda big=big: self.engine._vet_batch_impl(big))
-            dispatches += 1
-            off = 0
-            for sid, delta in group:
-                seg = BatchVetResult(*(a[off:off + delta.count] for a in res))
-                self._members[sid].stream.commit(delta, seg)
-                serviced[sid] = delta.count
-                off += delta.count
-                rows += delta.count
-
-        results: Dict[Hashable, Optional[BatchVetResult]] = {}
-        deferred: Dict[Hashable, int] = {}
-        flags: List[RegimeShift] = []
-        for sid, m in self._members.items():
-            results[sid] = m.stream.collect()
-            if self.monitor is not None and results[sid] is not None:
-                flags.extend(self.monitor.observe(
-                    sid, results[sid].vet, first=m.stream.first_retained,
-                    tenant=m.tenant))
-            left = m.stream.pending_windows
-            if left > 0:
-                deferred[sid] = left
-            # Staleness counts ticks since the stream last received *any*
-            # service while waiting; a partially served stream is not
-            # starving (fairness already gave its tenant a share), so only
-            # fully passed-over streams age.
-            if sid in serviced:
-                m.staleness = 0
-            elif left > 0:
-                m.staleness += 1
+            results: Dict[Hashable, Optional[BatchVetResult]] = {}
+            deferred: Dict[Hashable, int] = {}
+            flags: List[RegimeShift] = []
+            with _span(self.tracer, "mux.collect", tid=self.trace_tid):
+                for sid, m in self._members.items():
+                    results[sid] = m.stream.collect()
+                    left = m.stream.pending_windows
+                    if left > 0:
+                        deferred[sid] = left
+                    # Staleness counts ticks since the stream last received
+                    # *any* service while waiting; a partially served stream
+                    # is not starving (fairness already gave its tenant a
+                    # share), so only fully passed-over streams age.
+                    if sid in serviced:
+                        m.staleness = 0
+                    elif left > 0:
+                        m.staleness += 1
+            if self.monitor is not None:
+                # Same observe order as the collect loop (registration
+                # order), so flags are identical to the pre-split single
+                # loop — only the span boundary separates the phases.
+                with _span(self.tracer, "mux.anomaly", tid=self.trace_tid):
+                    for sid, m in self._members.items():
+                        if results[sid] is not None:
+                            flags.extend(self.monitor.observe(
+                                sid, results[sid].vet,
+                                first=m.stream.first_retained,
+                                tenant=m.tenant))
+            tick_span.set(dispatches=dispatches, rows=rows)
 
         self._dispatches += dispatches
         self._rows += rows

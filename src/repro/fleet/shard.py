@@ -61,6 +61,7 @@ from typing import (
 import numpy as np
 
 from ..engine import VetEngine, VetStream
+from ..obs.trace import span as _span
 from .anomaly import RegimeShift
 from .mux import BatchVetResult, MuxStats, MuxTick, VetMux, _flush_loop
 from .schedule import split_budget
@@ -345,7 +346,8 @@ class ShardedVetMux:
                  budget: Optional[int] = None,
                  tenant_weights: Optional[Dict[str, float]] = None,
                  urgent_headroom: int = 0,
-                 placement: str = "pack"):
+                 placement: str = "pack",
+                 tracer=None):
         if engines is not None and engine is not None:
             raise ValueError("pass engines= (one per shard) or engine= "
                              "(a template), not both")
@@ -377,6 +379,18 @@ class ShardedVetMux:
                               urgent_headroom=urgent_headroom)
                        for e in engines]
         self._ticks = 0
+        self.tracer = None
+        if tracer is not None:
+            self.set_tracer(tracer)
+
+    def set_tracer(self, tracer) -> None:
+        """Attach (or detach, with ``None``) a ``repro.obs.Tracer``.  Each
+        shard mux gets its own ``tid`` lane (the shard index), so one trace
+        shows the K in-process shards side by side; the fan-out/merge spans
+        land on lane 0."""
+        self.tracer = tracer
+        for k, m in enumerate(self._muxes):
+            m.set_tracer(tracer, tid=k)
 
     @property
     def placement(self) -> str:
@@ -535,31 +549,37 @@ class ShardedVetMux:
         their shard regardless of the slice.
         """
         self._ticks += 1
-        if self.budget is None:
-            budgets: Tuple[Optional[int], ...] = (None,) * self.n_shards
-        else:
-            demands = [0] * self.n_shards
-            for sid, placed in self._placed.items():
-                demands[placed.shard] += \
-                    self._muxes[placed.shard].stream(sid).pending_windows
-            budgets = tuple(split_budget(self.budget, demands))
-        ticks: List[MuxTick] = []
-        for m, b in zip(self._muxes, budgets):
-            m.budget = b
-            try:
-                ticks.append(m.tick())
-            finally:
-                m.budget = None  # pressure ticks between fan-outs: unbounded
-        results: Dict[Hashable, Optional[BatchVetResult]] = {}
-        serviced: Dict[Hashable, int] = {}
-        deferred: Dict[Hashable, int] = {}
-        for sid, placed in self._placed.items():  # registration order
-            t = ticks[placed.shard]
-            results[sid] = t.results[sid]
-            if sid in t.serviced:
-                serviced[sid] = t.serviced[sid]
-            if sid in t.deferred:
-                deferred[sid] = t.deferred[sid]
+        with _span(self.tracer, "fleet.tick", shards=self.n_shards,
+                   streams=len(self._placed)):
+            with _span(self.tracer, "fleet.plan"):
+                if self.budget is None:
+                    budgets: Tuple[Optional[int], ...] = \
+                        (None,) * self.n_shards
+                else:
+                    demands = [0] * self.n_shards
+                    for sid, placed in self._placed.items():
+                        demands[placed.shard] += self._muxes[placed.shard] \
+                            .stream(sid).pending_windows
+                    budgets = tuple(split_budget(self.budget, demands))
+            ticks: List[MuxTick] = []
+            for m, b in zip(self._muxes, budgets):
+                m.budget = b
+                try:
+                    ticks.append(m.tick())
+                finally:
+                    # pressure ticks between fan-outs: unbounded
+                    m.budget = None
+            with _span(self.tracer, "fleet.merge"):
+                results: Dict[Hashable, Optional[BatchVetResult]] = {}
+                serviced: Dict[Hashable, int] = {}
+                deferred: Dict[Hashable, int] = {}
+                for sid, placed in self._placed.items():  # registration order
+                    t = ticks[placed.shard]
+                    results[sid] = t.results[sid]
+                    if sid in t.serviced:
+                        serviced[sid] = t.serviced[sid]
+                    if sid in t.deferred:
+                        deferred[sid] = t.deferred[sid]
         return ShardTick(
             results=results, serviced=serviced, deferred=deferred,
             urgent=tuple(sid for t in ticks for sid in t.urgent),

@@ -55,6 +55,7 @@ import numpy as np
 
 from ...engine import BatchVetResult, VetEngine, VetStream
 from ...kernels.runtime import platform_default_hint
+from ...obs.trace import span as _span, timed as _timed
 from ..mux import MuxStats, MuxTick, _flush_loop
 from ..schedule import split_budget
 from ..shard import ShardPlacer, ShardTick
@@ -226,6 +227,17 @@ class ShardHandle:
         self.elapsed_s = 0.0
         self._async_budget: Optional[int] = None
         self._async_sent = False
+        # Observability (repro.obs): when a tracer is attached, every round
+        # trip is a ``transport.*`` span on lane ``index`` — and elapsed_s
+        # is read off the *same* span stopwatch, so there is exactly one
+        # clock source whether tracing is on or off.  ``trace_enabled``
+        # mirrors the worker-side state so ``_revive`` can re-enable it
+        # (the ``trace`` op is NOT journaled: journals clear at
+        # checkpoints).  ``tick_sent_at`` anchors the adoption of this
+        # worker's spans into the driver clock.
+        self.tracer = None
+        self.trace_enabled = False
+        self.tick_sent_at = 0.0
 
     @property
     def account(self) -> ShardAccount:
@@ -245,25 +257,31 @@ class ShardHandle:
         return self._unwrap(op, payload, reply, journal)
 
     def _reliable(self, op: str, payload: Any) -> tuple:
-        t0 = time.perf_counter()
+        # One stopwatch for both accounting and tracing: elapsed_s is the
+        # span's own duration (``timed`` measures even with tracer=None),
+        # never a second perf_counter pair that could disagree with it.
+        sw = _timed(self.tracer, "transport.roundtrip", tid=self.index,
+                    shard=self.index, op=op)
         try:
-            for attempt in range(self.max_retries + 1):
-                try:
-                    if not self.channel.alive:
-                        self._revive()
-                    self.channel.send((op, payload))
-                    return self.channel.recv(self.timeout)
-                except _TransportFailure as exc:
-                    self.channel.kill()
-                    if attempt >= self.max_retries:
-                        raise TransportError(
-                            f"shard {self.index}: {op!r} failed after "
-                            f"{attempt} retries: {exc}") from exc
-                    self.retries += 1
-                    self._sleep(self.backoff_base
-                                * self.backoff_factor ** attempt)
+            with sw:
+                for attempt in range(self.max_retries + 1):
+                    try:
+                        if not self.channel.alive:
+                            self._revive()
+                        self.channel.send((op, payload))
+                        return self.channel.recv(self.timeout)
+                    except _TransportFailure as exc:
+                        self.channel.kill()
+                        if attempt >= self.max_retries:
+                            raise TransportError(
+                                f"shard {self.index}: {op!r} failed after "
+                                f"{attempt} retries: {exc}") from exc
+                        self.retries += 1
+                        sw.set(retries=attempt + 1)
+                        self._sleep(self.backoff_base
+                                    * self.backoff_factor ** attempt)
         finally:
-            self.elapsed_s += time.perf_counter() - t0
+            self.elapsed_s += sw.dur
 
     def _unwrap(self, op: str, payload: Any, reply: tuple,
                 journal: bool) -> Any:
@@ -288,6 +306,10 @@ class ShardHandle:
             self._roundtrip("restore", self.checkpoint_blob)
         for op, payload in self.journal:
             self._roundtrip(op, payload)
+        if self.trace_enabled:
+            # Not journaled (journals clear at checkpoints), so the fresh
+            # worker must be told explicitly to keep tracing.
+            self._roundtrip("trace", True)
 
     def _roundtrip(self, op: str, payload: Any) -> Any:
         # Replay primitive: transport failures propagate to the retry loop,
@@ -309,24 +331,32 @@ class ShardHandle:
         the full reliable path (revive + retry)."""
         self._async_budget = budget
         self._async_sent = False
-        t0 = time.perf_counter()
+        sw = _timed(self.tracer, "transport.send", tid=self.index,
+                    shard=self.index, op="tick")
         try:
-            if not self.channel.alive:
-                self._revive()
-            self.channel.send(("tick", budget))
-            self._async_sent = True
+            with sw:
+                if not self.channel.alive:
+                    self._revive()
+                if self.tracer is not None:
+                    # Driver-clock anchor for adopting this tick's
+                    # worker-side spans (Tracer.adopt at=).
+                    self.tick_sent_at = self.tracer.now()
+                self.channel.send(("tick", budget))
+                self._async_sent = True
         except _TransportFailure:
             self.channel.kill()
         finally:
-            self.elapsed_s += time.perf_counter() - t0
+            self.elapsed_s += sw.dur
 
     def finish_tick(self) -> TickReply:
         budget = self._async_budget
         self._async_budget = None
         if self._async_sent:
-            t0 = time.perf_counter()
+            sw = _timed(self.tracer, "transport.recv", tid=self.index,
+                        shard=self.index, op="tick")
             try:
-                reply = self.channel.recv(self.timeout)
+                with sw:
+                    reply = self.channel.recv(self.timeout)
             except _TransportFailure:
                 self.channel.kill()
                 self.retries += 1
@@ -334,7 +364,7 @@ class ShardHandle:
             else:
                 return self._unwrap("tick", budget, reply, journal=False)
             finally:
-                self.elapsed_s += time.perf_counter() - t0
+                self.elapsed_s += sw.dur
         return self.call("tick", budget)
 
     def close(self) -> None:
@@ -385,6 +415,12 @@ class TransportVetMux:
         mp_context: multiprocessing start method (default ``"spawn"``:
             fork-safety with jax in play; see ``repro.kernels.runtime``).
         sleep: backoff sleeper, injectable for tests.
+        tracer: optional ``repro.obs.Tracer``.  When set, driver-side work
+            traces onto pid 0 (``fleet.*`` on lane 0, ``transport.*`` on
+            lane = shard index) and every worker is told to trace too —
+            its spans ride back on each ``TickReply`` and are adopted into
+            this tracer under pid ``shard + 1``, yielding one cross-process
+            trace.
 
     Example::
 
@@ -415,7 +451,8 @@ class TransportVetMux:
                  timeout: float = 60.0,
                  checkpoint_every: int = 1,
                  mp_context: Union[str, Any] = "spawn",
-                 sleep: Callable[[float], None] = time.sleep):
+                 sleep: Callable[[float], None] = time.sleep,
+                 tracer=None):
         if driver not in DRIVERS:
             raise ValueError(
                 f"driver must be one of {DRIVERS}, got {driver!r}")
@@ -482,6 +519,21 @@ class TransportVetMux:
         for ch in channels:
             if not ch.alive:
                 ch.spawn()
+        self.tracer = None
+        if tracer is not None:
+            self.set_tracer(tracer)
+
+    def set_tracer(self, tracer) -> None:
+        """Attach (or detach, with ``None``) a driver-side tracer and toggle
+        worker-side tracing to match.  The ``trace`` op round-trips now so
+        workers start draining spans from the very next tick."""
+        self.tracer = tracer
+        enabled = tracer is not None
+        for h in self._handles:
+            h.tracer = tracer
+            if h.trace_enabled != enabled:
+                h.call("trace", enabled)
+                h.trace_enabled = enabled
 
     def __repr__(self) -> str:
         return (f"TransportVetMux(shards={self.n_shards}, "
@@ -607,25 +659,39 @@ class TransportVetMux:
         checkpointed and their journals cleared.
         """
         self._ticks += 1
-        if self.budget is None:
-            budgets: Tuple[Optional[int], ...] = (None,) * self.n_shards
-        else:
-            demands = [h.call("demand", None) for h in self._handles]
-            budgets = tuple(split_budget(self.budget, demands))
-        for h, b in zip(self._handles, budgets):
-            h.tick_async(b)
-        ticks = [self._as_mux_tick(h.finish_tick()) for h in self._handles]
-        self._checkpoint_due()
-        results: Dict[Hashable, Optional[BatchVetResult]] = {}
-        serviced: Dict[Hashable, int] = {}
-        deferred: Dict[Hashable, int] = {}
-        for sid, placed in self._placer.placed.items():  # registration order
-            t = ticks[placed.shard]
-            results[sid] = t.results[sid]
-            if sid in t.serviced:
-                serviced[sid] = t.serviced[sid]
-            if sid in t.deferred:
-                deferred[sid] = t.deferred[sid]
+        with _span(self.tracer, "fleet.tick", shards=self.n_shards,
+                   streams=len(self._placer.placed)):
+            with _span(self.tracer, "fleet.plan", shards=self.n_shards):
+                if self.budget is None:
+                    budgets: Tuple[Optional[int], ...] \
+                        = (None,) * self.n_shards
+                else:
+                    demands = [h.call("demand", None) for h in self._handles]
+                    budgets = tuple(split_budget(self.budget, demands))
+            for h, b in zip(self._handles, budgets):
+                h.tick_async(b)
+            replies = [h.finish_tick() for h in self._handles]
+            if self.tracer is not None:
+                for h, r in zip(self._handles, replies):
+                    # Worker spans rode back on the reply; re-anchor them to
+                    # the driver clock at the moment this tick was sent, on
+                    # the worker's own process lane.
+                    self.tracer.adopt(r.spans, pid=h.index + 1,
+                                      at=h.tick_sent_at,
+                                      name=f"shard{h.index}")
+            ticks = [self._as_mux_tick(r) for r in replies]
+            self._checkpoint_due()
+            results: Dict[Hashable, Optional[BatchVetResult]] = {}
+            serviced: Dict[Hashable, int] = {}
+            deferred: Dict[Hashable, int] = {}
+            with _span(self.tracer, "fleet.merge", shards=self.n_shards):
+                for sid, placed in self._placer.placed.items():  # reg. order
+                    t = ticks[placed.shard]
+                    results[sid] = t.results[sid]
+                    if sid in t.serviced:
+                        serviced[sid] = t.serviced[sid]
+                    if sid in t.deferred:
+                        deferred[sid] = t.deferred[sid]
         return ShardTick(
             results=results, serviced=serviced, deferred=deferred,
             urgent=tuple(sid for t in ticks for sid in t.urgent),

@@ -126,6 +126,10 @@ class TickReply(NamedTuple):
     # tuple pickles over the pipe as-is).  Appended with a default so a
     # checkpoint journal recorded before this field replays cleanly.
     flags: tuple = ()
+    # Worker-side SpanRecords drained since the last reply (empty unless
+    # the driver enabled tracing via the ``trace`` op).  Appended after
+    # ``flags`` with a default for the same journal-replay compatibility.
+    spans: tuple = ()
 
 
 class ShardAccount(NamedTuple):

@@ -13,6 +13,7 @@ from __future__ import annotations
 import os
 from typing import Any, Hashable, Optional
 
+from ...obs.trace import Tracer
 from ..mux import VetMux
 from .proto import FAULT_EXIT, TickReply, WorkerFault
 
@@ -32,9 +33,24 @@ class ShardWorker:
     def __init__(self, engine, *, tenant_weights=None, urgent_headroom=0):
         self.mux = VetMux(engine, tenant_weights=tenant_weights,
                           urgent_headroom=urgent_headroom)
+        self.tracer: Optional[Tracer] = None
 
     def handle(self, op: str, payload: Any) -> Any:
         return getattr(self, "_op_" + op)(payload)
+
+    # -------------------------------------------------------- observability
+    def _op_trace(self, enabled: bool) -> None:
+        """Enable/disable worker-side tracing.  Completed spans ride back on
+        every ``TickReply`` (drained per tick) and get adopted into the
+        driver's trace under this shard's process lane.  NOT journaled by
+        the driver (the journal clears at checkpoints); ``_revive`` re-sends
+        it explicitly after a respawn."""
+        if enabled and self.tracer is None:
+            self.tracer = Tracer()
+            self.mux.set_tracer(self.tracer)
+        elif not enabled and self.tracer is not None:
+            self.tracer = None
+            self.mux.set_tracer(None)
 
     # ------------------------------------------------------ mux surface
     def _op_register(self, payload: dict) -> None:
@@ -71,7 +87,9 @@ class ShardWorker:
         return TickReply(newest=newest, serviced=dict(t.serviced),
                          deferred=dict(t.deferred), urgent=tuple(t.urgent),
                          dispatches=t.dispatches, rows=t.rows,
-                         padded_rows=t.padded_rows, flags=t.flags)
+                         padded_rows=t.padded_rows, flags=t.flags,
+                         spans=(tuple(self.tracer.drain())
+                                if self.tracer is not None else ()))
 
     def _op_collect(self, sid: Hashable):
         # Full retained rows for one stream (BatchVetResult or None) — the

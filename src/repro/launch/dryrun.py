@@ -63,7 +63,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, skip_cost: bool = False
     multi = mesh_kind == "multi"
     mesh = make_production_mesh(multi_pod=multi)
     n_chips = mesh.devices.size
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     def build(cfg_v, unroll: bool, n_micro: int = 1, moment_dtype=None):
         from repro.optim.adamw import AdamWConfig
@@ -177,7 +177,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, skip_cost: bool = False
             + mem.output_size_in_bytes
             - mem.alias_size_in_bytes,
         },
-        "full_compile_s": round(time.time() - t0, 1),
+        "full_compile_s": round(time.perf_counter() - t0, 1),
     }
     del compiled, lowered
 

@@ -32,6 +32,8 @@ from ..configs import get_config
 from ..engine import BatchVetResult, VetEngine, default_engine
 from ..fleet import ShardedVetMux, TransportVetMux
 from ..models import decode_step, init_cache, init_params, prefill
+from ..obs import LedgerReport, Tracer, format_ledger, ledger_from, write_chrome
+from ..obs.trace import timed as _timed
 from ..profiling import RecordProfiler
 
 __all__ = ["ServeResult", "serve"]
@@ -54,6 +56,9 @@ class ServeResult:
     # Regime-shift flags raised by the mux's live anomaly monitor while the
     # decode loop ran (``repro.fleet.RegimeShift``; empty on a quiet run).
     flags: tuple = ()
+    # Optimality ledger over the run's trace (None unless a tracer was
+    # attached): measured-over-floor ratios per instrumented stage.
+    ledger: Optional[LedgerReport] = None
 
 
 def serve(
@@ -71,10 +76,14 @@ def serve(
     engine: Optional[VetEngine] = None,
     shards: int = 1,
     transport: bool = False,
+    tracer: Optional[Tracer] = None,
+    trace_path: Optional[str] = None,
 ) -> ServeResult:
     cfg = get_config(cfg_or_name) if isinstance(cfg_or_name, str) else cfg_or_name
     if not cfg.supports_decode:
         raise ValueError(f"{cfg.name} is encoder-only")
+    if tracer is None and trace_path is not None:
+        tracer = Tracer()
 
     key = jax.random.PRNGKey(seed)
     params = init_params(cfg, key, dtype=dtype)
@@ -91,7 +100,7 @@ def serve(
     logits, cache = prefill_fn(params, cache, {"tokens": prompts})
     tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
 
-    prof = RecordProfiler(unit=record_unit)
+    prof = RecordProfiler(unit=record_unit, name="decode", tracer=tracer)
     # Live window snapshots: this worker's stream registered in a fleet mux
     # and ticked as unit-records complete, so each tick vets only the
     # windows the last unit finished through the fleet's coalesced dispatch
@@ -108,11 +117,13 @@ def serve(
         # — the decode loop keeps vetting through worker crashes.
         mux = TransportVetMux(shards,
                               engine=(engine if engine is not None
-                                      else default_engine("jax", buckets=64)))
+                                      else default_engine("jax", buckets=64)),
+                              tracer=tracer)
     else:
         mux = ShardedVetMux(shards,
                             engine=(engine if engine is not None
-                                    else default_engine("jax", buckets=64)))
+                                    else default_engine("jax", buckets=64)),
+                            tracer=tracer)
     try:
         # The drift view keeps the newest _SNAPSHOT_HISTORY windows: plenty
         # for any one generation, bounded for a serve loop that lives
@@ -144,14 +155,18 @@ def serve(
                 tok.block_until_ready()
             out.append(tok)
             if prof.num_records % record_unit == 0:
-                tv = time.perf_counter()
-                # O(new units) extraction + incremental tick: only the
-                # windows this unit completed are vetted.
-                new_units = prof.unit_times(start=fed_units)
-                mux.feed("decode", new_units)
-                fed_units += new_units.size
-                _tick()
-                vet_s += time.perf_counter() - tv
+                # One stopwatch for accounting and tracing (repro.obs.timed):
+                # vet_s is the "serve.vet" span's own duration, measured on
+                # the same clock whether or not a tracer is attached.
+                sw = _timed(tracer, "serve.vet", step=i)
+                with sw:
+                    # O(new units) extraction + incremental tick: only the
+                    # windows this unit completed are vetted.
+                    new_units = prof.unit_times(start=fed_units)
+                    mux.feed("decode", new_units)
+                    fed_units += new_units.size
+                    _tick()
+                vet_s += sw.dur
         wall = time.perf_counter() - t0 - vet_s
         gen = np.asarray(jnp.concatenate(out, axis=1))
 
@@ -167,8 +182,9 @@ def serve(
             vet, ei, pr = float(r.vet), float(r.ei), float(r.pr)
             if verbose:
                 print(f"[serve] vet={vet:.3f} EI={ei:.4f}s PR={pr:.4f}s")
-            mux.feed("decode", times[fed_units:])  # trailing units after loop
-            _tick()
+            with _timed(tracer, "serve.vet", post=True):
+                mux.feed("decode", times[fed_units:])  # trailing units
+                _tick()
             # Transport ticks only carry newest-window rows; the retained
             # drift history comes from the bulk path either way.
             win = (mux.collect("decode") if transport
@@ -191,8 +207,21 @@ def serve(
     tps = batch * gen_len / wall
     if verbose:
         print(f"[serve] {batch}x{gen_len} tokens in {wall:.2f}s = {tps:.1f} tok/s")
+    ledger = None
+    if tracer is not None:
+        # The live optimality dashboard: per-stage measured-over-floor
+        # ratios from this run's trace (driver + any transport workers —
+        # their spans were adopted tick by tick).
+        ledger = ledger_from(tracer.records)
+        if verbose:
+            print(format_ledger(ledger, title="serve optimality ledger"))
+        if trace_path is not None:
+            write_chrome(trace_path, tracer)
+            if verbose:
+                print(f"[serve] chrome trace -> {trace_path} "
+                      f"(load in Perfetto / chrome://tracing)")
     return ServeResult(tokens=gen, vet=vet, ei=ei, pr=pr, tokens_per_s=tps,
-                       windows=windows, flags=tuple(flags))
+                       windows=windows, flags=tuple(flags), ledger=ledger)
 
 
 def main():
@@ -207,12 +236,17 @@ def main():
     ap.add_argument("--transport", action="store_true",
                     help="run each shard mux in its own worker process "
                          "(retries + checkpoint/resume)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="trace the run and write a Chrome trace-event JSON "
+                         "here (Perfetto-loadable); also prints the "
+                         "optimality ledger")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
-          gen_len=args.gen_len, shards=args.shards, transport=args.transport)
+          gen_len=args.gen_len, shards=args.shards, transport=args.transport,
+          trace_path=args.trace)
 
 
 if __name__ == "__main__":

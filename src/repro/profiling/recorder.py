@@ -9,16 +9,22 @@ or a data-pipeline fetch — and the same unit-grouping knob applies.
 Also provides sub-phase timing ("spill"-analogue phases: data fetch,
 checkpoint write) so the Fig. 3 constancy benchmark can contrast them with
 record times.
+
+Both timers are thin shims over ``repro.obs.trace.timed`` — one clock
+source for the whole repo.  Pass ``tracer=`` and every record / phase also
+lands in the trace as a ``record.<name>`` / ``phase.<name>`` span; without
+a tracer the stopwatch path is allocation-free and nothing else changes.
 """
 
 from __future__ import annotations
 
 import contextlib
-import time
 from collections import defaultdict
 from typing import Callable, Dict, List
 
 import numpy as np
+
+from ..obs.trace import timed as _timed
 
 __all__ = ["RecordProfiler", "PhaseTimer"]
 
@@ -35,20 +41,25 @@ class RecordProfiler:
         times = prof.unit_times()            # seconds per unit, np.float64
     """
 
-    def __init__(self, unit: int = 5, name: str = "task"):
+    def __init__(self, unit: int = 5, name: str = "task", tracer=None):
         if unit < 1:
             raise ValueError("unit must be >= 1")
         self.unit = unit
         self.name = name
+        self.tracer = tracer
         self._raw_ns: List[int] = []
 
     @contextlib.contextmanager
     def record(self):
-        t0 = time.perf_counter_ns()
+        sw = _timed(self.tracer, "record." + self.name)
         try:
-            yield
+            with sw:
+                yield
         finally:
-            self._raw_ns.append(time.perf_counter_ns() - t0)
+            # sw.dur is set by __exit__ (before this finally runs), so a
+            # record is kept even when the timed body raises — same contract
+            # as the old perf_counter_ns try/finally.
+            self._raw_ns.append(int(sw.dur * 1e9))
 
     def wrap(self, fn: Callable) -> Callable:
         """Return fn wrapped so every call is timed as one record."""
@@ -92,16 +103,18 @@ class RecordProfiler:
 class PhaseTimer:
     """Sub-phase wall times keyed by name (read-map / spill / merge analogue)."""
 
-    def __init__(self):
+    def __init__(self, tracer=None):
+        self.tracer = tracer
         self._ns: Dict[str, List[int]] = defaultdict(list)
 
     @contextlib.contextmanager
     def phase(self, name: str):
-        t0 = time.perf_counter_ns()
+        sw = _timed(self.tracer, "phase." + name)
         try:
-            yield
+            with sw:
+                yield
         finally:
-            self._ns[name].append(time.perf_counter_ns() - t0)
+            self._ns[name].append(int(sw.dur * 1e9))
 
     def times(self, name: str) -> np.ndarray:
         return np.asarray(self._ns.get(name, ()), dtype=np.float64) * 1e-9
