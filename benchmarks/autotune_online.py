@@ -1,0 +1,167 @@
+"""Online autotuner accounting: recovery quality + the cost-perf elbow.
+
+Three questions priced here:
+
+- **Does the closed loop find the optimum?**  The full ``VetTuner`` loop
+  runs against the ``tunable`` scenario on every backend, noiseless and
+  under seeded noise, and the committed artifact records the recovered
+  assignment's per-knob index error against the exhaustive grid oracle
+  (and the oracle's own agreement with the designed optimum).
+- **Where is the operating point?**  A diminishing-returns parallelism
+  sweep (runtime ~ 1 + beta/v on a doubling unit grid, the nes-spark
+  executor-count shape) is priced through the shared candidate evaluator
+  and walked with the elbow rule — the artifact commits the frontier and
+  the chosen elbow.
+- **What does tuning cost?**  Mean wall time per closed-loop tick vs the
+  same fleet ticked without a tuner attached.
+
+Wall-clock numbers are environment-dependent and not pinned; the recovery
+and frontier fields are pinned by ``tests/test_benchmark_results_schema.py``
+(error == 0 noiseless on every backend, <= 1 step noisy, frontier runtimes
+strictly decreasing with an interior, strictly-increasing elbow trail).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.engine import BACKENDS, VetEngine
+from repro.fleet import tunable
+from repro.profiling import simulate_records
+from repro.sched.tuner import (
+    FrontierPoint,
+    elbow_walk,
+    evaluate_candidate,
+    grid_scenario,
+    tune_scenario,
+)
+
+from .common import emit, save_json
+
+SEED = 0
+NOISE = 0.15
+NOISELESS_TICKS = 96
+NOISY_TICKS = 160
+FRONTIER_UNITS = (1, 2, 4, 8, 16)
+FRONTIER_BETA = 8.0
+
+
+def _error_steps(a, b, scenario) -> int:
+    return max(abs(k.index_of(a[k.name]) - k.index_of(b[k.name]))
+               for k in scenario.knobs)
+
+
+def _recover(backend: str, *, noise: float, max_ticks: int,
+             settle: int) -> Dict:
+    sc = tunable(seed=SEED, noise=noise)
+    grid = grid_scenario(tunable(seed=SEED), engine=VetEngine(backend,
+                                                              buckets=64))
+    t0 = time.perf_counter()
+    rep = tune_scenario(sc, engine=VetEngine(backend, buckets=64),
+                        max_ticks=max_ticks, settle=settle, seed=SEED)
+    wall = time.perf_counter() - t0
+    return {
+        "best": rep.best,
+        "grid_best": grid.best[0],
+        "designed_optimum": dict(sc.optimum),
+        "error_steps": _error_steps(rep.best, grid.best[0], sc),
+        "rounds": rep.rounds,
+        "rollbacks": rep.rollbacks,
+        "converged": rep.converged,
+        "ticks": rep.ticks,
+        "tick_us": wall / rep.ticks * 1e6,
+    }
+
+
+def _frontier() -> Dict:
+    """Diminishing-returns sweep: each parallelism step v scales the
+    reducible-overhead channel by (1 + beta/v); runtime is the summed
+    profile, cost is runtime * v."""
+    prof = simulate_records(512, seed=SEED, overhead_scale=2e-3,
+                            pareto_alpha=2.0)
+    eng = VetEngine("numpy", buckets=64)
+    points, vets = [], []
+    for v in FRONTIER_UNITS:
+        times = prof.ideal + prof.overhead * (1.0 + FRONTIER_BETA / v)
+        cand = evaluate_candidate({"parallelism": v}, times, engine=eng)
+        points.append(FrontierPoint(cand.knobs, float(times.sum()), float(v)))
+        vets.append(cand.vet)
+    res = elbow_walk(points)
+    return {
+        "units": list(FRONTIER_UNITS),
+        "beta": FRONTIER_BETA,
+        "runtime_s": [p.runtime for p in points],
+        "cost": [p.cost for p in points],
+        "vet": vets,
+        "elbow_index": res.index,
+        "elbow_units": res.point.units,
+        "trail": list(res.trail),
+    }
+
+
+def _overhead() -> Dict:
+    """Closed-loop tick price vs the same fleet ticked without a tuner."""
+    from repro.fleet.mux import VetMux
+    from repro.sched.tuner import VetTuner, objective_from_tick
+
+    def loop(tuned: bool) -> float:
+        sc = tunable(seed=SEED)
+        mux = VetMux(VetEngine("numpy", buckets=64), monitor=False)
+        for spec in sc.specs:
+            spec.register(mux)
+        tuner = VetTuner(sc.hooks(), seed=SEED) if tuned else None
+        n = 64
+        t0 = time.perf_counter()
+        for t in range(n):
+            for sid, chunk in sc.chunks(t).items():
+                mux.feed(sid, chunk)
+            y = objective_from_tick(mux.tick())
+            if tuner is not None:
+                tuner.step(y)
+        return (time.perf_counter() - t0) / n * 1e6
+
+    plain_us = loop(False)
+    tuned_us = loop(True)
+    return {"plain_tick_us": plain_us, "tuned_tick_us": tuned_us,
+            "overhead_pct": (tuned_us / plain_us - 1.0) * 100.0}
+
+
+def run() -> None:
+    recovery: Dict[str, Dict] = {}
+    for backend in BACKENDS:
+        noiseless = _recover(backend, noise=0.0, max_ticks=NOISELESS_TICKS,
+                             settle=1)
+        noisy = _recover(backend, noise=NOISE, max_ticks=NOISY_TICKS,
+                         settle=2)
+        recovery[backend] = {"noiseless": noiseless, "noisy": noisy}
+        emit(f"autotune_online_{backend}", noiseless["tick_us"],
+             f"err={noiseless['error_steps']} "
+             f"noisy_err={noisy['error_steps']} "
+             f"rounds={noiseless['rounds']} "
+             f"converged={noiseless['converged']}")
+
+    frontier = _frontier()
+    emit("autotune_online_elbow", 0.0,
+         f"units={frontier['elbow_units']:.0f} "
+         f"trail={'>'.join(str(i) for i in frontier['trail'])}")
+
+    overhead = _overhead()
+    emit("autotune_online_overhead", overhead["tuned_tick_us"],
+         f"plain={overhead['plain_tick_us']:.1f}us "
+         f"({overhead['overhead_pct']:+.1f}%)")
+
+    save_json("autotune_online", {
+        "seed": SEED,
+        "noise": NOISE,
+        "noisy_ticks": NOISY_TICKS,
+        "recovery": recovery,
+        "frontier": frontier,
+        "overhead": overhead,
+    })
+
+
+if __name__ == "__main__":
+    run()

@@ -33,6 +33,8 @@ SUITES = [
      "detection quality over the scenario bank"),
     ("fleet_obs", "Framework: tracer overhead gate + cross-process trace "
      "+ self-applied optimality ledger"),
+    ("autotune_online", "Framework: online VetTuner recovery vs the grid "
+     "oracle + cost-perf elbow + closed-loop tick overhead"),
 ]
 
 

@@ -16,10 +16,15 @@
    optimality ledger — the paper's measured-over-floor discipline applied
    to our own stack.  ``--trace out.json`` dumps a Chrome trace you can
    load in Perfetto / chrome://tracing.
+8. Closed loop: an online ``VetTuner`` drives the ``tunable`` scenario's
+   knobs through the knob_hooks seam — SPSA probe pairs on the integer
+   knobs, a discounted bandit on the categorical one — and lands on the
+   scenario's designed optimum, which exhaustive grid search confirms.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
       PYTHONPATH=src python examples/quickstart.py --stanza 6   # fleet only
       PYTHONPATH=src python examples/quickstart.py --stanza 7 --trace t.json
+      PYTHONPATH=src python examples/quickstart.py --stanza 8   # autotuner
 """
 
 import argparse
@@ -99,6 +104,34 @@ def stanza7(n_workers: int = 12, shards: int = 2, n_ticks: int = 5,
             "ledger_ratio": ledger.ratio}
 
 
+def stanza8(backend: str = "numpy", max_ticks: int = 96,
+            verbose: bool = True) -> dict:
+    """Online autotuning: VetTuner vs the exhaustive grid oracle."""
+    from repro.engine import VetEngine
+    from repro.fleet import tunable
+    from repro.sched.tuner import grid_scenario, tune_scenario
+
+    if verbose:
+        print("=" * 64)
+        print("8) Closed loop: online VetTuner on the tunable scenario "
+              f"({backend} backend)")
+    sc = tunable(seed=0)
+    rep = tune_scenario(tunable(seed=0), engine=VetEngine(backend, buckets=64),
+                        max_ticks=max_ticks, seed=0)
+    grid = grid_scenario(sc, engine=VetEngine(backend, buckets=64))
+    agree = rep.best == grid.best[0] == sc.optimum
+    if verbose:
+        knobs = ", ".join(f"{k}={v}" for k, v in sorted(rep.best.items()))
+        print(f"   tuner best after {rep.ticks} ticks / {rep.rounds} rounds: "
+              f"{knobs}  (vet objective {rep.best_y:.3f})")
+        print(f"   grid oracle ({len(grid.table)} cells) agrees: {agree}   "
+              f"designed optimum recovered, converged={rep.converged}")
+        print("   (noisy recovery + all-backend locks: tests/test_tuner.py; "
+              "live fleets: launch.serve --tune)")
+    return {"best": rep.best, "agree": agree, "rounds": rep.rounds,
+            "converged": rep.converged}
+
+
 def main(trace_path=None):
     print("=" * 64)
     print("1) Controlled validation: simulator with known ground truth")
@@ -158,6 +191,7 @@ def main(trace_path=None):
 
     stanza6()
     stanza7(trace_path=trace_path)
+    stanza8()
     print("Done. vet == 1 would mean nothing left to optimize.")
 
 
@@ -165,8 +199,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--stanza", type=int, default=None,
                     help="run a single stanza (6 = sharded fleet, 7 = "
-                         "traced fleet + ledger; the others share state "
-                         "and run together)")
+                         "traced fleet + ledger, 8 = online autotuner; "
+                         "the others share state and run together)")
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="write stanza 7's Chrome trace-event JSON here "
                          "(Perfetto-loadable)")
@@ -177,6 +211,8 @@ if __name__ == "__main__":
         stanza6()
     elif args.stanza == 7:
         stanza7(trace_path=args.trace)
+    elif args.stanza == 8:
+        stanza8()
     else:
-        ap.error("only stanzas 6 and 7 run standalone; omit --stanza for "
+        ap.error("only stanzas 6-8 run standalone; omit --stanza for "
                  "the full tour")

@@ -140,6 +140,18 @@ print(f"[ci] quickstart trace validated ({sys.argv[1]})")
 PY
 fi
 
+# Online autotuner: the simulator-recoverability lock (online VetTuner ==
+# grid oracle exactly with noise off, within one knob step under seeded
+# noise, all backends), the knob_hooks seam, and the elbow/SPSA/rollback
+# property suite (skips offline).
+echo "[ci] autotuner: recoverability differential + property suites"
+tuner_status=0
+python -m pytest -q -x \
+  --junitxml="$REPORTS_DIR/tuner.xml" \
+  tests/test_tuner.py \
+  tests/test_tuner_properties.py \
+  || tuner_status=$?
+
 # Windowed vetting next (same reasoning for the batched sliding/ragged path).
 echo "[ci] windowed vetting: differential + property + benchmark-smoke suites"
 windowed_status=0
@@ -180,6 +192,8 @@ python -m pytest -q \
   --ignore=tests/test_changepoint_edges.py \
   --ignore=tests/test_changepoint_properties.py \
   --ignore=tests/test_obs.py \
+  --ignore=tests/test_tuner.py \
+  --ignore=tests/test_tuner_properties.py \
   --ignore=tests/test_vet_windows.py \
   --ignore=tests/test_vet_windows_properties.py \
   --ignore=tests/test_benchmarks_smoke.py \
@@ -214,6 +228,10 @@ fi
 if [ "$obs_status" -ne 0 ]; then
   echo "[ci] FAIL: observability suites / trace validation exited $obs_status"
   exit "$obs_status"
+fi
+if [ "$tuner_status" -ne 0 ]; then
+  echo "[ci] FAIL: autotuner suites exited $tuner_status"
+  exit "$tuner_status"
 fi
 if [ "$windowed_status" -ne 0 ]; then
   echo "[ci] FAIL: windowed vetting suites exited $windowed_status"

@@ -55,6 +55,14 @@ This package is the layer between the streams and the engine:
   ``tests/test_fleet_anomaly.py`` pins ±2-tick localization on every
   backend.
 
+- ``repro.fleet.knobs`` is the write-back seam for the online autotuner
+  (``repro.sched.tuner``): ``Knob``/``KnobHooks`` bind named, grid-valued
+  fleet knobs to validated setter/getter pairs so a tuner can apply budget
+  or workload changes between ticks and snapshot/rollback them safely;
+  ``mux_knob_hooks`` wires the per-tick ``tick_budget`` knob of any mux
+  variant, and ``scenarios.tunable()`` is the knob-sensitive simulator
+  workload (known optimum) that locks the whole loop differentially.
+
 Routed consumers: ``repro.sched.straggler.VetController`` (one mux across
 all workers — ``decide()`` is one coalesced dispatch set instead of a
 per-worker loop) and ``repro.launch.serve`` (dashboard window snapshots
@@ -62,6 +70,7 @@ ticked through a mux inside the decode loop).
 """
 
 from .anomaly import AnomalyMonitor, RegimeShift
+from .knobs import Knob, KnobHooks, mux_knob_hooks
 from .mux import MuxStats, MuxTick, VetMux
 from .scenarios import (
     ANOMALY_SCENARIOS,
@@ -69,8 +78,10 @@ from .scenarios import (
     FleetEvent,
     FleetScenario,
     StreamSpec,
+    TunableScenario,
     build,
     play,
+    tunable,
 )
 from .schedule import StreamRequest, TickPlan, plan_tick, split_budget
 from .shard import (
@@ -97,6 +108,8 @@ __all__ = [
     "FleetEvent",
     "FleetScenario",
     "JobVet",
+    "Knob",
+    "KnobHooks",
     "MuxStats",
     "MuxTick",
     "ShardAccount",
@@ -108,11 +121,14 @@ __all__ = [
     "TickPlan",
     "TransportError",
     "TransportVetMux",
+    "TunableScenario",
     "VetMux",
     "build",
     "job_reduce",
     "merge_job",
+    "mux_knob_hooks",
     "plan_tick",
     "play",
     "split_budget",
+    "tunable",
 ]

@@ -44,6 +44,15 @@ anomaly monitor's differential suites (windows are non-overlapping —
   overhead level: a *negative control* that must never flag) plus a
   migrated group whose level shifts at the onset.
 
+The *tunable* scenario (``tunable()`` / ``TunableScenario``) is the
+differential lock for the online autotuner (``repro.sched.tuner``): a
+mutable workload whose reducible-overhead channel is shaped by the current
+knob assignment through a known envelope with a known optimum, so a tuner
+driving it through ``knob_hooks`` can be checked against exhaustive grid
+search.  It is deliberately *not* in ``SCENARIOS`` — it has no fixed event
+script (each tick's records depend on the knobs at that tick), so ``play``
+and the replay-differential suites cannot drive it.
+
 All randomness flows from ``numpy.random.default_rng(seed)`` / the
 simulator's seeded draws, so every scenario is bitwise reproducible.
 """
@@ -56,9 +65,10 @@ from typing import Callable, Dict, List, Mapping, Tuple
 import numpy as np
 
 from ..profiling import simulate_records
+from .knobs import Knob, KnobHooks
 
 __all__ = ["ANOMALY_SCENARIOS", "FleetEvent", "FleetScenario", "SCENARIOS",
-           "StreamSpec", "build", "play"]
+           "StreamSpec", "TunableScenario", "build", "play", "tunable"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -453,6 +463,111 @@ SCENARIOS: Dict[str, Callable[..., FleetScenario]] = {
     "churn": churn,
     **ANOMALY_SCENARIOS,
 }
+
+
+# ------------------------------------------------------- tunable scenario
+class TunableScenario:
+    """A knob-sensitive workload with a known optimum: the tuner's lock.
+
+    Unlike the frozen bank scenarios, this one is *mutable*: each tick's
+    record times depend on the knob assignment currently written into
+    ``state`` (via the ``KnobHooks`` from :meth:`hooks`, the same seam a
+    tuner uses against a live mux).  The knobs shape only the simulator's
+    reducible-overhead channel through a multiplicative envelope
+
+        ``envelope = prod_spsa (1 + curvature * |idx - idx*|) * factor[arm]``
+
+    so the vet objective has a unique known minimum at :attr:`optimum`
+    (every factor is 1 exactly there) and strictly unimodal coordinate
+    slices everywhere else — exhaustive grid search provably lands on
+    ``optimum``, which makes "did the online tuner find it?" a crisp
+    differential test rather than a judgement call.
+
+    Determinism contract: with ``noise == 0`` the per-worker base profile
+    is drawn once and reused every tick, so a given assignment produces
+    *bitwise identical* record bytes on every tick — the objective is a
+    pure function of the assignment (and the engine's fingerprint cache
+    turns repeat visits into hits).  With ``noise > 0`` a per-(tick,
+    worker) seeded lognormal multiplier rides on the overhead channel:
+    still reproducible, but the objective is noisy exactly the way
+    arXiv:1611.10052 assumes.
+
+    Windows are non-overlapping (``window == stride == chunk``): one
+    window completes per stream per tick and contains only that tick's
+    records, so tick ``t``'s vets reflect exactly the assignment applied
+    before tick ``t``.
+    """
+
+    #: knob grids with the optimum interior on every axis; ``io_mode`` is
+    #: deliberately unordered-in-effect (factors 1.55 / 1.0 / 1.3) so the
+    #: index geometry is useless and only a bandit can tune it.
+    DEFAULT_KNOBS = (Knob("n_micro", (1, 2, 4, 8)),
+                     Knob("q_chunk", (16, 32, 64, 128)),
+                     Knob("io_mode", (0, 1, 2), kind="bandit"))
+    DEFAULT_OPTIMUM = {"n_micro": 4, "q_chunk": 32, "io_mode": 1}
+    BANDIT_FACTORS = {"io_mode": (1.55, 1.0, 1.3)}
+
+    def __init__(self, *, n_workers: int = 4, window: int = 48,
+                 curvature: float = 0.4, noise: float = 0.0, seed: int = 0):
+        self.name = "tunable"
+        self.n_workers = int(n_workers)
+        self.window = int(window)
+        self.curvature = float(curvature)
+        self.noise = float(noise)
+        self.seed = int(seed)
+        self.knobs = self.DEFAULT_KNOBS
+        self.optimum = dict(self.DEFAULT_OPTIMUM)
+        # Start at the far corner of every grid: worst n_micro/q_chunk,
+        # worst bandit arm — the tuner has real distance to cover.
+        self.state: Dict[str, object] = {k.name: k.values[0]
+                                         for k in self.knobs}
+        self._base = [_anomaly_profile(self.window, self.seed, i)
+                      for i in range(self.n_workers)]
+
+    @property
+    def specs(self) -> Tuple[StreamSpec, ...]:
+        return tuple(StreamSpec(_sid(i), self.window, self.window,
+                                4 * self.window)
+                     for i in range(self.n_workers))
+
+    def hooks(self) -> KnobHooks:
+        """The write-back seam: dict-backed hooks over :attr:`state`."""
+        return KnobHooks.over_state(self.knobs, self.state)
+
+    def envelope(self, assignment: Mapping | None = None) -> float:
+        """Overhead multiplier for an assignment (current state if None)."""
+        a = dict(self.state if assignment is None else assignment)
+        m = 1.0
+        for knob in self.knobs:
+            idx = knob.index_of(a[knob.name])
+            opt = knob.index_of(self.optimum[knob.name])
+            if knob.kind == "spsa":
+                m *= 1.0 + self.curvature * abs(idx - opt)
+            else:
+                m *= self.BANDIT_FACTORS[knob.name][idx]
+        return m
+
+    def chunks(self, tick: int) -> Dict[str, np.ndarray]:
+        """One tick's record chunks under the *current* knob state."""
+        m = self.envelope()
+        out = {}
+        for i, prof in enumerate(self._base):
+            mult = m
+            if self.noise:
+                rng = np.random.default_rng([self.seed, 7919, tick, i])
+                mult = m * float(np.exp(self.noise * rng.standard_normal()))
+            out[_sid(i)] = prof.ideal + prof.overhead * mult
+        return out
+
+    def reset(self) -> None:
+        """Back to the starting corner (for reuse across harness runs)."""
+        for k in self.knobs:
+            self.state[k.name] = k.values[0]
+
+
+def tunable(**overrides) -> TunableScenario:
+    """Build the tuner-lock scenario (factory mirroring the bank callables)."""
+    return TunableScenario(**overrides)
 
 
 def build(name: str, **overrides) -> FleetScenario:

@@ -59,6 +59,9 @@ class ServeResult:
     # Optimality ledger over the run's trace (None unless a tracer was
     # attached): measured-over-floor ratios per instrumented stage.
     ledger: Optional[LedgerReport] = None
+    # Online tuner summary (None unless ``tune=True``): best/current knob
+    # assignment, round/rollback counts (``VetTuner.report()``).
+    tuner: Optional[dict] = None
 
 
 def serve(
@@ -76,6 +79,7 @@ def serve(
     engine: Optional[VetEngine] = None,
     shards: int = 1,
     transport: bool = False,
+    tune: bool = False,
     tracer: Optional[Tracer] = None,
     trace_path: Optional[str] = None,
 ) -> ServeResult:
@@ -136,6 +140,19 @@ def serve(
         fed_units = 0
         flags = []  # regime-shift flags raised live during decode
         vet_s = 0.0  # estimation overhead, excluded from the throughput wall
+        tuner = None
+        if tune:
+            # Close the loop on the live fleet: the mux's tick_budget knob
+            # driven by the online controller, with each estimation tick's
+            # own measured duration as the (noisy) objective sample.  One
+            # knob on one worker is the smoke-scale version of the same
+            # write-back path a multi-worker deployment tunes its vet
+            # stream with (repro.sched.tuner; tests/test_tuner.py locks
+            # the controller against the grid oracle on the simulator).
+            from ..fleet.knobs import mux_knob_hooks
+            from ..sched.tuner import VetTuner
+            tuner = VetTuner(mux_knob_hooks(mux), seed=seed,
+                             noise_band=0.5, tracer=tracer)
 
         def _tick():
             # One mux tick; any regime-shift flag the live monitor raises is
@@ -167,6 +184,9 @@ def serve(
                     fed_units += new_units.size
                     _tick()
                 vet_s += sw.dur
+                if tuner is not None:
+                    # Knob write-back happens here, strictly between ticks.
+                    tuner.step(sw.dur)
         wall = time.perf_counter() - t0 - vet_s
         gen = np.asarray(jnp.concatenate(out, axis=1))
 
@@ -207,6 +227,17 @@ def serve(
     tps = batch * gen_len / wall
     if verbose:
         print(f"[serve] {batch}x{gen_len} tokens in {wall:.2f}s = {tps:.1f} tok/s")
+    tuner_report = None
+    if tuner is not None:
+        tuner_report = tuner.report()
+        if verbose:
+            knobs = " ".join(f"{k}={v}"
+                             for k, v in sorted(tuner_report["best"].items()))
+            print(f"[serve] tuner: best {knobs} "
+                  f"(obj {tuner_report['best_y']*1e3:.2f}ms/tick over "
+                  f"{tuner_report['rounds']} rounds / "
+                  f"{tuner_report['rollbacks']} rollbacks"
+                  f"{', converged' if tuner_report['converged'] else ''})")
     ledger = None
     if tracer is not None:
         # The live optimality dashboard: per-stage measured-over-floor
@@ -221,7 +252,8 @@ def serve(
                 print(f"[serve] chrome trace -> {trace_path} "
                       f"(load in Perfetto / chrome://tracing)")
     return ServeResult(tokens=gen, vet=vet, ei=ei, pr=pr, tokens_per_s=tps,
-                       windows=windows, flags=tuple(flags), ledger=ledger)
+                       windows=windows, flags=tuple(flags), ledger=ledger,
+                       tuner=tuner_report)
 
 
 def main():
@@ -236,6 +268,10 @@ def main():
     ap.add_argument("--transport", action="store_true",
                     help="run each shard mux in its own worker process "
                          "(retries + checkpoint/resume)")
+    ap.add_argument("--tune", action="store_true",
+                    help="close the loop: drive the mux tick_budget knob "
+                         "with the online VetTuner and print its best "
+                         "assignment on the dashboard")
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="trace the run and write a Chrome trace-event JSON "
                          "here (Perfetto-loadable); also prints the "
@@ -246,7 +282,7 @@ def main():
         cfg = cfg.reduced()
     serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
           gen_len=args.gen_len, shards=args.shards, transport=args.transport,
-          trace_path=args.trace)
+          tune=args.tune, trace_path=args.trace)
 
 
 if __name__ == "__main__":

@@ -5,14 +5,18 @@ here grid-searches launcher knobs (microbatch count, record unit, q_chunk)
 against measured step time — then vet answers the paper's question: *how far
 from ideal is the tuned configuration still?*  (Paper Table 3: Starfish-tuned
 jobs still show vet 3.3-4.2.)
+
+This is the *offline* half of the tuning layer: candidate scoring is shared
+with the online controller (``repro.sched.tuner.evaluate_candidate``), and
+all step timing routes through the ``repro.obs`` tracer clock — pass
+``tracer=`` and every candidate shows up in the Chrome trace as a
+``tuner.candidate`` span over its ``tune.step`` samples.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import itertools
-import time
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -22,16 +26,9 @@ from ..engine import VetEngine, default_engine
 from ..models import init_params
 from ..optim.adamw import AdamWConfig, init_opt_state
 from ..profiling import RecordProfiler
+from .tuner import TuneCandidate, evaluate_candidate
 
 __all__ = ["TuneCandidate", "tune"]
-
-
-@dataclasses.dataclass
-class TuneCandidate:
-    knobs: Dict
-    mean_step_s: float
-    vet: float
-    ei: float
 
 
 def tune(
@@ -45,6 +42,7 @@ def tune(
     seed: int = 0,
     verbose: bool = True,
     engine: Optional[VetEngine] = None,
+    tracer=None,
 ) -> List[TuneCandidate]:
     """Measure every knob combination; return candidates sorted by step time,
     each annotated with its vet score (the optimality audit)."""
@@ -63,7 +61,7 @@ def tune(
             cfg, None, opt_cfg=AdamWConfig(total_steps=steps_per_candidate),
             q_chunk=q_chunk, n_micro=n_micro,
         ))
-        prof = RecordProfiler(unit=1)
+        prof = RecordProfiler(unit=1, name="tune.step", tracer=tracer)
         for s in range(steps_per_candidate):
             b = {k: jnp.asarray(v) for k, v in pipe.batch_at(s).items()}
             with prof.record():
@@ -72,13 +70,8 @@ def tune(
         times = prof.record_times()[2:]  # drop compile steps
         eng = engine if engine is not None else default_engine(
             "jax", buckets=min(64, max(8, times.size // 4)))
-        r = eng.vet_one(times)
-        cand = TuneCandidate(
-            knobs={"n_micro": n_micro, "q_chunk": q_chunk},
-            mean_step_s=float(times.mean()),
-            vet=float(r.vet),
-            ei=float(r.ei),
-        )
+        cand = evaluate_candidate({"n_micro": n_micro, "q_chunk": q_chunk},
+                                  times, engine=eng, tracer=tracer)
         results.append(cand)
         if verbose:
             print(f"[tune] {cand.knobs}: step {cand.mean_step_s*1e3:.1f}ms "

@@ -44,6 +44,8 @@ SCHEMAS = {
     "windowvet": {"sliding", "w256", "w1024"},
     "fleet_obs": {"overhead", "ledger", "trace"},
     "fleet_obs_trace": {"traceEvents"},
+    "autotune_online": {"seed", "noise", "noisy_ticks", "recovery",
+                        "frontier", "overhead"},
     "fig1_gap": None,  # free-form payloads: presence + valid JSON only
     "fig3_spill": None,
     "fig9_tail": None,
@@ -467,4 +469,72 @@ def test_fleet_anomaly_overhead_section_finite():
         f"rerun `python -m benchmarks.run --only fleet_anomaly`")
     assert ov["workers"] == 256
     for key in ("monitor_on_tick_us", "monitor_off_tick_us"):
+        assert math.isfinite(ov[key]) and ov[key] > 0
+
+
+def autotune_online_payload():
+    path = os.path.join(RESULTS_DIR, "autotune_online.json")
+    if not os.path.exists(path):
+        pytest.skip("autotune_online.json not generated on this machine")
+    return load("autotune_online")
+
+
+AUTOTUNE_RECOVERY_KEYS = {"best", "grid_best", "designed_optimum",
+                          "error_steps", "rounds", "rollbacks", "converged",
+                          "ticks", "tick_us"}
+AUTOTUNE_FRONTIER_KEYS = {"units", "beta", "runtime_s", "cost", "vet",
+                          "elbow_index", "elbow_units", "trail"}
+
+
+def test_autotune_online_recovery_pins():
+    """The tentpole acceptance artifact: on every backend the online tuner
+    recovers the grid oracle's optimum exactly with noise off (the
+    objective is then a pure function of the assignment — any error means
+    the walk broke, not that the machine was loaded) and within one knob
+    step under seeded noise.  Tick timings are environment noise and stay
+    unpinned."""
+    payload = autotune_online_payload()
+    for backend in BACKENDS:
+        rec = payload["recovery"][backend]
+        for mode in ("noiseless", "noisy"):
+            missing = AUTOTUNE_RECOVERY_KEYS - set(rec[mode])
+            assert not missing, (
+                f"autotune_online.json {backend}/{mode} stale: missing "
+                f"{sorted(missing)} — rerun `python -m benchmarks.run "
+                f"--only autotune_online`")
+            assert math.isfinite(rec[mode]["tick_us"])
+            assert rec[mode]["tick_us"] > 0
+        noiseless = rec["noiseless"]
+        assert noiseless["error_steps"] == 0, backend
+        assert noiseless["best"] == noiseless["grid_best"], backend
+        # The oracle itself sits on the scenario's designed optimum.
+        assert noiseless["grid_best"] == noiseless["designed_optimum"]
+        assert noiseless["converged"], backend
+        assert rec["noisy"]["error_steps"] <= 1, backend
+
+
+def test_autotune_online_frontier_monotone_with_interior_elbow():
+    """Frontier pins: runtimes strictly decrease along the unit sweep
+    (diminishing returns, still returns), the elbow trail is strictly
+    increasing from the reference, and the chosen elbow is interior —
+    accepting everything would ignore cost, accepting nothing perf."""
+    payload = autotune_online_payload()
+    fr = payload["frontier"]
+    missing = AUTOTUNE_FRONTIER_KEYS - set(fr)
+    assert not missing, (
+        f"autotune_online.json frontier stale: missing {sorted(missing)} — "
+        f"rerun `python -m benchmarks.run --only autotune_online`")
+    rt = fr["runtime_s"]
+    assert all(b < a for a, b in zip(rt, rt[1:])), "runtimes not decreasing"
+    trail = fr["trail"]
+    assert trail[0] == 0
+    assert all(b > a for a, b in zip(trail, trail[1:]))
+    assert trail[-1] == fr["elbow_index"]
+    assert 0 < fr["elbow_index"] < len(fr["units"]) - 1
+    # vet agrees with the runtime ordering: more parallelism, less
+    # reducible overhead, lower vet.
+    vets = fr["vet"]
+    assert all(b < a for a, b in zip(vets, vets[1:]))
+    ov = payload["overhead"]
+    for key in ("plain_tick_us", "tuned_tick_us"):
         assert math.isfinite(ov[key]) and ov[key] > 0

@@ -1,0 +1,190 @@
+"""Property suite for the online autotuner (skips if hypothesis is absent).
+
+Elbow-walk invariants (nes-spark ``extract_opt_conf`` semantics):
+
+- the accepted trail is strictly increasing in candidate index and always
+  starts at the reference candidate;
+- the stopping point is invariant to uniformly rescaling every runtime or
+  every unit count (only the frontier's *shape* matters);
+- a one-candidate frontier is its own elbow.
+
+SPSA invariants (arXiv:1611.10052 estimator on the index grid):
+
+- on a separable quadratic the estimate satisfies the descent property
+  ``<ghat, grad> = <grad, delta>**2 >= 0``, so a sign step never moves
+  against the seeded gradient;
+- the rollback guard never accepts a base-phase regression beyond the
+  noise band: whenever the operating point measures worse than
+  ``best * (1 + band)``, the tuner reverts to the best-seen assignment —
+  verified by replaying the tuner's own history against independently
+  reconstructed running statistics.
+"""
+
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.fleet import Knob, KnobHooks
+from repro.sched.tuner import (
+    FrontierPoint,
+    VetTuner,
+    elbow_walk,
+    spsa_gradient,
+)
+
+runtimes = st.lists(st.floats(1e-3, 1e3, allow_nan=False,
+                              allow_infinity=False),
+                    min_size=1, max_size=12)
+
+
+def _frontier(rts):
+    # Units grow with candidate index (the nes-spark executor sweep shape);
+    # runtimes are arbitrary — the walk must cope with non-monotone perf.
+    return [FrontierPoint({"v": i}, rt, float(i + 1))
+            for i, rt in enumerate(rts)]
+
+
+# ------------------------------------------------------------- elbow walk
+@given(runtimes)
+def test_elbow_trail_is_monotone_and_anchored(rts):
+    res = elbow_walk(_frontier(rts))
+    assert res.trail[0] == 0
+    assert list(res.trail) == sorted(set(res.trail))
+    assert all(b > a for a, b in zip(res.trail, res.trail[1:]))
+    assert res.index == res.trail[-1]
+    assert res.point is _frontier(rts)[res.index] or \
+        res.point == _frontier(rts)[res.index]
+
+
+@given(runtimes, st.floats(1e-3, 1e3), st.floats(1e-3, 1e3))
+def test_elbow_invariant_to_uniform_rescaling(rts, rt_scale, unit_scale):
+    """Scaling every runtime (or every unit count) by one constant scales
+    ``perf_inc`` and ``cost_inc`` numerator and denominator alike, so the
+    accepted trail cannot move."""
+    base = elbow_walk(_frontier(rts))
+    scaled_rt = elbow_walk([FrontierPoint(p.knobs, p.runtime * rt_scale,
+                                          p.units)
+                            for p in _frontier(rts)])
+    scaled_units = elbow_walk([FrontierPoint(p.knobs, p.runtime,
+                                             p.units * unit_scale)
+                               for p in _frontier(rts)])
+    assert scaled_rt.trail == base.trail
+    assert scaled_units.trail == base.trail
+
+
+def test_elbow_single_candidate_returns_it():
+    p = FrontierPoint({"v": 1}, 2.0, 1.0)
+    res = elbow_walk([p])
+    assert res.index == 0 and res.trail == (0,) and res.point == p
+    with pytest.raises(ValueError):
+        elbow_walk([])
+
+
+def test_elbow_diminishing_returns_interior():
+    """The canonical shape: runtime ~ (1 + beta/v) on a doubling unit grid
+    puts the elbow strictly inside the sweep (accepting everything would
+    ignore cost; accepting nothing would ignore perf)."""
+    units = (1, 2, 4, 8, 16)
+    pts = [FrontierPoint({"v": v}, 1.0 + 8.0 / v, float(v)) for v in units]
+    res = elbow_walk(pts)
+    assert 0 < res.index < len(pts) - 1
+
+
+# ------------------------------------------------------------------- SPSA
+@given(
+    st.integers(1, 6).flatmap(lambda d: st.tuples(
+        st.lists(st.floats(0.1, 10.0), min_size=d, max_size=d),   # curvature
+        st.lists(st.integers(-5, 5), min_size=d, max_size=d),     # optimum
+        st.lists(st.integers(-6, 6), min_size=d, max_size=d),     # point
+        st.lists(st.sampled_from((-1, 1)), min_size=d, max_size=d))))
+def test_spsa_descent_property_on_quadratics(case):
+    """Seeded-gradient sign match: on y = sum a_i (x_i - o_i)^2 the SPSA
+    estimate from one +/-delta probe pair satisfies <ghat, grad> >= 0."""
+    a, o, x, delta = (np.asarray(v, np.float64) for v in case)
+
+    def y(p):
+        return float(np.sum(a * (p - o) ** 2))
+
+    ghat = np.asarray(spsa_gradient(y(x + delta), y(x - delta),
+                                    x + delta, x - delta))
+    grad = 2.0 * a * (x - o)
+    assert float(ghat @ grad) >= -1e-9 * max(1.0, float(np.abs(grad).sum()))
+    # And the estimator is exact along the probe direction:
+    # ghat = <grad, delta> * delta elementwise on a quadratic.
+    np.testing.assert_allclose(ghat, float(grad @ delta) * delta,
+                               rtol=1e-9, atol=1e-9)
+
+
+def test_spsa_gradient_zero_span_and_shape_guard():
+    assert spsa_gradient(2.0, 1.0, (3, 1), (3, 0)) == (0.0, 1.0)
+    with pytest.raises(ValueError):
+        spsa_gradient(1.0, 0.0, (1, 2), (1,))
+
+
+# --------------------------------------------------------- rollback guard
+@given(st.lists(st.floats(0.1, 10.0, allow_nan=False,
+                          allow_infinity=False),
+                min_size=8, max_size=60),
+       st.floats(0.0, 1.0), st.integers(0, 2 ** 31 - 1))
+@settings(deadline=None)
+def test_rollback_guard_never_accepts_banded_regression(ys, band, seed):
+    """Replay the tuner's own history against independently reconstructed
+    running means: every base phase that measured beyond the noise band of
+    the then-best assignment must carry the rollback action (and only
+    those may)."""
+    hooks = KnobHooks.over_state(
+        (Knob("a", (1, 2, 4)), Knob("m", (0, 1), kind="bandit")),
+        {"a": 1, "m": 0})
+    tuner = VetTuner(hooks, seed=seed, noise_band=band)
+    for y in ys:
+        tuner.step(y)
+
+    stats = {}
+
+    def _push(assignment, y):
+        key = tuple(sorted(assignment.items()))
+        n, mean = stats.get(key, (0, 0.0))
+        stats[key] = (n + 1, (mean * n + y) / (n + 1))
+        return key
+
+    rollbacks = 0
+    for rec in tuner.history:
+        key = _push(rec.assignment, rec.y)
+        if rec.phase != "base":
+            assert rec.action != "rollback"
+            continue
+        best_key = min(stats, key=lambda k: stats[k][1])
+        regressed = (best_key != key
+                     and rec.y > stats[best_key][1] * (1.0 + band))
+        assert (rec.action == "rollback") == regressed
+        rollbacks += regressed
+    assert rollbacks == tuner.rollbacks
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(deadline=None, max_examples=25)
+def test_walk_converges_on_deterministic_unimodal_objective(seed):
+    """Any seed, deterministic separable objective: the walk must end with
+    both knobs exactly on their optimum (the noiseless-exactness argument,
+    free of the simulator)."""
+    state = {"a": 1, "m": 0}
+    hooks = KnobHooks.over_state(
+        (Knob("a", (1, 2, 4, 8)), Knob("m", (0, 1, 2), kind="bandit")),
+        state)
+    tuner = VetTuner(hooks, seed=seed)
+    target = {"a": 4, "m": 2}
+    factors = {0: 1.5, 1: 1.2, 2: 1.0}
+
+    def y():
+        ka = hooks.knob("a")
+        return ((1.0 + 0.5 * abs(ka.index_of(state["a"])
+                                 - ka.index_of(target["a"])))
+                * factors[state["m"]])
+
+    for _ in range(120):
+        tuner.step(y())
+    assert tuner.best[0] == target
+    assert tuner.current == target
